@@ -1,0 +1,45 @@
+"""Kernel-layer microbenchmarks: compat_join reference-backend throughput
+across table sizes (the CPU-measurable proxy; the Pallas kernel itself is
+exercised via interpret-mode tests and the dry-run cost model)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import write_csv
+from repro.core.join import compat_mask_ref
+
+
+def compat_join_scaling(reduced=True):
+    rng = np.random.default_rng(0)
+    rows = []
+    sizes = [(1024, 64), (4096, 64), (16384, 64), (16384, 256)]
+    nv, ne = 4, 2
+    rel = rng.random((nv, 2)) < 0.3
+    trel = np.zeros((ne, 1), np.int8)
+    trel[-1, 0] = -1
+    for ca, cb in sizes:
+        ba = jnp.asarray(rng.integers(0, 1000, (ca, nv)), jnp.int32)
+        ea = jnp.asarray(rng.integers(0, 500, (ca, ne)), jnp.int32)
+        va = jnp.asarray(rng.random(ca) < 0.7)
+        bb = jnp.asarray(rng.integers(0, 1000, (cb, 2)), jnp.int32)
+        eb = jnp.asarray(rng.integers(0, 500, (cb, 1)), jnp.int32)
+        vb = jnp.asarray(rng.random(cb) < 0.9)
+        f = jax.jit(lambda *a: compat_mask_ref(*a, rel, trel, 200))
+        out = f(ba, ea, va, bb, eb, vb)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        iters = 20
+        for _ in range(iters):
+            out = f(ba, ea, va, bb, eb, vb)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        pairs_per_s = ca * cb * iters / ((time.perf_counter() - t0))
+        rows.append([ca, cb, round(us, 1), f"{pairs_per_s:.3e}"])
+    return write_csv("kernel_compat_join",
+                     ["rows_a", "rows_b", "us_per_call", "pairs_per_sec"],
+                     rows)

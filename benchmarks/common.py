@@ -1,0 +1,92 @@
+"""Shared benchmark utilities: timing, CSV output, engine runners,
+space accounting for the MS-tree vs independent-storage comparison."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import numpy as np
+import jax
+
+from repro.core.engine import build_tick
+from repro.core.state import init_state, make_batch
+from repro.stream.generator import to_batches
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def bench_stream(plan, stream, batch_size: int, extract: bool = False,
+                 warmup_batches: int = 2, max_batches: int | None = None):
+    """Run a stream through a fresh engine; returns (edges/sec, state).
+
+    ``max_batches`` caps the timed region (rate extrapolates) so serial
+    batch=1 sweeps stay affordable on the 1-core CI box.
+    """
+    tick = jax.jit(build_tick(plan, extract_matches=extract))
+    state = init_state(plan)
+    batches = [make_batch(**b) for b in to_batches(stream, batch_size)]
+    # compile + warm
+    for b in batches[:warmup_batches]:
+        state, _ = tick(state, b)
+    jax.block_until_ready(state.t_now)
+    timed = batches[warmup_batches:]
+    if max_batches is not None:
+        timed = timed[:max_batches]
+    t0 = time.perf_counter()
+    n_edges = 0
+    for b in timed:
+        state, _ = tick(state, b)
+        n_edges += int(np.asarray(b.valid).sum())
+    jax.block_until_ready(state.t_now)
+    dt = time.perf_counter() - t0
+    rate = n_edges / max(dt, 1e-9)
+    # drain the rest (untimed) so returned state covers the full stream
+    for b in batches[warmup_batches + len(timed):]:
+        state, _ = tick(state, b)
+    return rate, state
+
+
+# ------------------------------------------------------------------ #
+# Space accounting (paper Figures 16-17).
+# ------------------------------------------------------------------ #
+_NODE_BYTES_MSTREE = 4 * 4 + 1         # src, dst, ts, parent, valid
+
+
+def state_bytes(plan, state, mode: str = "mstree") -> int:
+    """Live partial-match storage in bytes under a storage model.
+
+    ``mstree``: each expansion-list node stores (src, dst, ts, parent).
+    ``ind``:    each partial match stores full bindings + per-edge ts
+                (the paper's Timing-IND / SJ-tree storage model).
+    """
+    total = 0
+    for si, s in enumerate(plan.subqueries):
+        for li, lv in enumerate(s.levels):
+            n = int(np.asarray(state.levels[si][li].valid).sum())
+            if mode == "mstree":
+                total += n * _NODE_BYTES_MSTREE
+            else:
+                nv = len(lv.vertex_layout)
+                total += n * ((nv + (li + 1)) * 4 + 1)
+    for gi, js in enumerate(plan.l0_joins):
+        n = int(np.asarray(state.l0[gi].valid).sum())
+        nv, ne = len(js.vertex_layout), len(js.edge_layout)
+        total += n * ((nv + ne) * 4 + 1)
+    return total
+
+
+def write_csv(name: str, header: list[str], rows: list):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    print(f"# {name}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()
+    return path

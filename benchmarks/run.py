@@ -1,0 +1,38 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+``python -m benchmarks.run [--full]`` — reduced scales by default (CPU
+CI); CSV per figure goes to stdout and benchmarks/results/.
+The roofline/dry-run tables (EXPERIMENTS.md §Dry-run/§Roofline) are
+produced separately by ``python -m repro.launch.dryrun --all`` and
+summarized by ``python -m benchmarks.report_dryrun``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import bench_engine, bench_kernels
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger scales (slower)")
+    args = ap.parse_args()
+    reduced = not args.full
+
+    t0 = time.time()
+    bench_engine.throughput_vs_window(reduced)        # Fig 14
+    bench_engine.throughput_vs_query_size(reduced)    # Fig 15
+    bench_engine.space_vs_window(reduced)             # Figs 16-17
+    bench_engine.concurrency_scaling(reduced)         # Figs 18-19
+    bench_engine.optimization_ablations(reduced)      # Fig 20
+    bench_engine.selectivity(reduced)                 # Fig 21
+    bench_engine.rescan_baseline(reduced)             # Fan-et-al regime
+    bench_kernels.compat_join_scaling(reduced)
+    print(f"# total bench wall time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

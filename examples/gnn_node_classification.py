@@ -1,0 +1,43 @@
+"""Train GAT on a synthetic cora-like citation graph (full-batch) and
+verify accuracy beats the majority-class baseline.
+
+    PYTHONPATH=src python examples/gnn_node_classification.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.gat_cora import smoke_config
+from repro.data.graphs import synth_cora_like
+from repro.launch.cells import make_gnn_train_step
+from repro.models.gnn import models as gnn
+from repro.optim import AdamWConfig, adamw_init
+
+
+def main():
+    data = synth_cora_like(n_nodes=600, n_edges=3000, d_feat=64,
+                           n_classes=5, seed=0)
+    cfg = gnn.GNNConfig(arch="gat", n_layers=2, d_in=64, d_hidden=16,
+                        n_heads=4, n_classes=5)
+    g = {k: jnp.asarray(v) for k, v in data.items()}
+    params = gnn.gat_init(jax.random.PRNGKey(0), cfg)
+    ocfg = AdamWConfig(weight_decay=5e-4)
+    opt = adamw_init(params, ocfg)
+    step = jax.jit(make_gnn_train_step(
+        cfg, lambda p, gg, c: gnn.node_classification_loss(p, gg, c),
+        ocfg, lr=5e-3))
+    for i in range(120):
+        params, opt, loss, _ = step(params, opt, g)
+        if i % 20 == 0:
+            print(f"step {i:3d} loss {float(loss):.4f}")
+    logits = gnn.gat_forward(params, g, cfg)
+    acc = float((jnp.argmax(logits, -1) == g["labels"]).mean())
+    base = float(np.bincount(data["labels"]).max() / len(data["labels"]))
+    print(f"train accuracy {acc:.3f} vs majority baseline {base:.3f}")
+    assert acc > base + 0.15
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

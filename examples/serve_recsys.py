@@ -1,0 +1,55 @@
+"""Wide&Deep CTR serving example: train briefly on the planted-signal
+synthetic CTR stream, then run batched online inference + retrieval.
+
+    PYTHONPATH=src python examples/serve_recsys.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.wide_deep import smoke_config
+from repro.data.recsys import recsys_batch
+from repro.launch.cells import make_recsys_train_step
+from repro.models.recsys import wide_deep as wd
+from repro.optim import AdamWConfig, adamw_init
+
+
+def main():
+    cfg = smoke_config()
+    params = wd.init(jax.random.PRNGKey(0), cfg)
+    ocfg = AdamWConfig(state_mode="factored")
+    opt = adamw_init(params, ocfg)
+    step = jax.jit(make_recsys_train_step(cfg, ocfg, lr=3e-3))
+    for i in range(150):
+        b = {k: jnp.asarray(v) for k, v in recsys_batch(
+            i, 256, cfg.n_sparse, cfg.vocab_per_field, cfg.n_dense,
+            cfg.n_wide_crosses).items()}
+        params, opt, loss, _ = step(params, opt, b)
+        if i % 30 == 0:
+            print(f"step {i:3d} bce {float(loss):.4f}")
+
+    # online inference: AUC-ish sanity on held-out batch
+    b = {k: jnp.asarray(v) for k, v in recsys_batch(
+        10_000, 2048, cfg.n_sparse, cfg.vocab_per_field, cfg.n_dense,
+        cfg.n_wide_crosses).items()}
+    scores = np.asarray(wd.forward(params, b, cfg))
+    y = np.asarray(b["labels"])
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(len(scores))
+    n1, n0 = y.sum(), (1 - y).sum()
+    auc = (ranks[y == 1].sum() - n1 * (n1 - 1) / 2) / (n1 * n0)
+    print(f"held-out AUC {auc:.3f}")
+    assert auc > 0.6, "planted CTR signal not learned"
+
+    # retrieval: top-k against a candidate table
+    cands = jax.random.normal(jax.random.PRNGKey(2), (5000, cfg.embed_dim))
+    user = jax.random.normal(jax.random.PRNGKey(3), (cfg.embed_dim,))
+    vals, idx = wd.retrieval_score(user, cands, top_k=10)
+    print(f"retrieval top-1 score {float(vals[0]):.3f} @ cand {int(idx[0])}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

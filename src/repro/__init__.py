@@ -1,0 +1,23 @@
+"""repro: Time Constrained Continuous Subgraph Search over Streaming Graphs.
+
+A production-grade JAX framework reproducing and extending Li, Zou, Özsu,
+Zhao (PVLDB 2018): timing-order-constrained subgraph isomorphism over
+streaming graphs — expansion lists, MS-tree compressed partial-match
+storage, and a TPU-native batched-tick adaptation of the paper's
+fine-grained-locking concurrency model.
+
+Subpackages
+-----------
+core       The paper's contribution: query compilation (TC decomposition,
+           join-order selection) and the streaming match engine (tick()).
+stream     Edge-stream generators, sliding-window bookkeeping.
+models     Assigned architecture zoo (LM transformers, GNNs, recsys).
+optim      AdamW (+ factored / quantized state), gradient compression.
+checkpoint Pytree save/restore with mesh resharding.
+runtime    Fault tolerance, elastic scaling, straggler mitigation.
+kernels    Pallas TPU kernels (compat_join, segment_reduce, embedding_bag).
+configs    One module per assigned architecture + paper query templates.
+launch     Mesh construction, multi-pod dry-run, train/serve drivers.
+"""
+
+__version__ = "0.1.0"

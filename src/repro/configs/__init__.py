@@ -1,0 +1,3 @@
+"""Assigned architecture configs (one module per arch) + registry."""
+
+from repro.configs.registry import ARCHS, ShapeSpec, ArchSpec, get_arch

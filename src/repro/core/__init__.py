@@ -1,0 +1,20 @@
+"""Core of the paper's contribution: timing-constrained continuous subgraph search.
+
+Layers
+------
+query       QueryGraph with a strict partial order ``prec`` over query edges.
+decompose   TC-subquery enumeration (Alg. 5), greedy minimum-cardinality
+            decomposition (Alg. 6), join-order selection (Def. 14).
+plan        Compilation of a decomposed query into numeric join specs
+            (REL vertex-compatibility matrices, TREL timing matrices,
+            binding-slot layouts) consumed by the device engine.
+state       Fixed-capacity device tables: per-level MS-tree SoA storage.
+engine      ``tick()``: batched insert/expire with streaming consistency.
+oracle      Exact pure-Python reference engine used as the test oracle.
+sjtree      SJ-tree baseline (Choudhury et al. 2015) + timing post-filter.
+distributed shard_map-wrapped tick for multi-device execution.
+"""
+
+from repro.core.query import QueryGraph
+from repro.core.decompose import decompose, tc_subqueries, join_order
+from repro.core.plan import ExecutionPlan, compile_plan

@@ -1,0 +1,448 @@
+"""The streaming match engine: ``tick()``.
+
+One tick ingests a batch of stream edges and advances every expansion
+list, with semantics *exactly equal* to processing the edges one-by-one
+in timestamp order (streaming consistency, Definition 13).
+
+How the paper's concurrency design maps to TPU dataflow
+-------------------------------------------------------
+The paper runs one thread per edge and serializes conflicting accesses to
+expansion-list items with per-item lock wait-lists ordered by timestamp
+(Section 5.2).  On a TPU there are no threads or locks; the equivalent
+schedule is *level-ordered batched processing*:
+
+ 1. Edges that match ``ε_j`` only ever write item ``L_i^j`` (Theorem 1) —
+    so items are the paper's "resources" and our loop over levels visits
+    each resource once per tick, in timing-sequence order.
+ 2. Within a TC-subquery the timing sequence is a ≺-chain, so the strict
+    ``ts_parent < ts_edge`` predicate *is* the lock wait-list: a batch
+    edge joins a same-tick parent row if and only if the sequential
+    schedule would have processed that parent first.  (Theorem: batched
+    tick ≡ sequential replay; property-tested in tests/test_engine_props.)
+ 3. Cross-subquery joins into ``L_0`` use delta joins — ``Δ(A)⋈B ∪
+    A_old⋈Δ(B)`` — the incremental-view form of Algorithm 1 lines 11-22.
+ 4. Deletion cascades run level-ordered top-down, which is the pure-
+    functional image of the paper's two-phase "partial removal"
+    (Section 5.3): no reader can ever observe a half-deleted path because
+    the tick is a pure function from state to state.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import join as J
+from repro.core.plan import ExecutionPlan
+from repro.core.state import (
+    EdgeBatch,
+    EngineState,
+    EngineStats,
+    L0Table,
+    LevelTable,
+)
+
+I32 = jnp.int32
+
+
+class TickResult(NamedTuple):
+    n_new_matches: jnp.ndarray     # int32 scalar
+    n_overflow: jnp.ndarray       # int32 scalar (this tick)
+    match_bindings: jnp.ndarray   # int32 [max_out, nv_total]
+    match_ets: jnp.ndarray        # int32 [max_out, ne_total]
+    match_valid: jnp.ndarray      # bool  [max_out]
+
+
+class _View(NamedTuple):
+    """Denormalized view of a table: what joins consume."""
+
+    bind: jnp.ndarray   # int32 [C, nv]
+    ets: jnp.ndarray    # int32 [C, ne]
+    valid: jnp.ndarray  # bool [C]
+    fresh: jnp.ndarray  # bool [C]
+
+
+def _safe_slots(slots, ok, capacity):
+    """Map ungranted slots to ``capacity`` so scatter mode='drop' skips them
+    (negative indices would *wrap* in JAX)."""
+    return jnp.where(ok, slots, capacity)
+
+
+def _append_level(
+    table: LevelTable,
+    parent_idx,
+    src,
+    dst,
+    ts,
+    req_valid,
+):
+    """Scatter new MS-tree nodes into free slots; returns (table, n_drop)."""
+    cap = table.valid.shape[0]
+    slots, ok, n_drop = J.alloc_slots(table.valid, req_valid, req_valid.shape[0])
+    s = _safe_slots(slots, ok, cap)
+    return (
+        LevelTable(
+            src=table.src.at[s].set(src, mode="drop"),
+            dst=table.dst.at[s].set(dst, mode="drop"),
+            ts=table.ts.at[s].set(ts, mode="drop"),
+            parent=table.parent.at[s].set(parent_idx, mode="drop"),
+            valid=table.valid.at[s].set(True, mode="drop"),
+            fresh=table.fresh.at[s].set(True, mode="drop"),
+        ),
+        n_drop,
+    )
+
+
+def _append_l0(table: L0Table, bindings, ets, req_valid):
+    cap = table.valid.shape[0]
+    slots, ok, n_drop = J.alloc_slots(table.valid, req_valid, req_valid.shape[0])
+    s = _safe_slots(slots, ok, cap)
+    return (
+        L0Table(
+            bindings=table.bindings.at[s].set(bindings, mode="drop"),
+            ets=table.ets.at[s].set(ets, mode="drop"),
+            valid=table.valid.at[s].set(True, mode="drop"),
+            fresh=table.fresh.at[s].set(True, mode="drop"),
+        ),
+        n_drop,
+    )
+
+
+def _compact(view: _View, mask, size: int):
+    """Gather up to ``size`` rows of ``view`` where ``mask``; returns a _View
+    of static size plus the overflow count."""
+    (idx,) = jnp.nonzero(mask, size=size, fill_value=-1)
+    ok = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    n_drop = jnp.maximum(jnp.sum(mask, dtype=I32) - size, 0)
+    return (
+        _View(
+            bind=jnp.take(view.bind, safe, axis=0),
+            ets=jnp.take(view.ets, safe, axis=0),
+            valid=ok,
+            fresh=ok,
+        ),
+        safe,
+        n_drop,
+    )
+
+
+def build_tick(
+    plan: ExecutionPlan,
+    backend: str = J.JoinBackend.REF,
+    extract_matches: bool = True,
+    max_out: int | None = None,
+    axis_name: str | None = None,
+    n_shards: int = 1,
+):
+    """Compile ``plan`` into a jit-able ``tick(state, batch) -> (state, res)``.
+
+    ``backend`` selects the compatibility-join implementation (pure jnp
+    reference or the Pallas kernel).  ``extract_matches=False`` skips
+    materializing result bindings (throughput mode).
+
+    Distribution (``axis_name`` set, run under shard_map): every table's
+    capacity axis is sharded.  Three design rules keep almost all work
+    local:
+      * level-1 appends are round-robined over shards by batch position;
+      * a level-j row lands on its parent's shard, so MS-tree parent
+        chains NEVER cross shards and reconstruction is collective-free;
+      * L0 delta joins all-gather only the (small) per-tick delta rows,
+        never the tables.  Scalar stats/results are psum'd.
+    """
+    q = plan.query
+    window = plan.window
+    max_out = max_out or max(js.max_new for js in plan.l0_joins) if plan.l0_joins \
+        else (max_out or plan.subqueries[0].levels[-1].max_new)
+
+    # ---- host-side constants ---------------------------------------- #
+    esl = jnp.asarray(plan.edge_src_label)
+    edl = jnp.asarray(plan.edge_dst_label)
+    eel = jnp.asarray(plan.edge_edge_label)
+    n_qedges = q.n_edges
+
+    # per-(subquery, level>=1) REL for the edge join
+    level_rel: dict[tuple[int, int], np.ndarray] = {}
+    for si, s in enumerate(plan.subqueries):
+        for li in range(1, len(s.levels)):
+            lv = s.levels[li]
+            nv_prev = len(s.levels[li - 1].vertex_layout)
+            rel = np.zeros((nv_prev, 2), dtype=bool)
+            if lv.src_slot >= 0:
+                rel[lv.src_slot, 0] = True
+            if lv.dst_slot >= 0:
+                rel[lv.dst_slot, 1] = True
+            level_rel[(si, li)] = rel
+    def _trel_chain(nea: int) -> np.ndarray:
+        """Chain timing spec: only A's last edge must precede the new edge —
+        the ≺-chain of a TC timing sequence makes the rest transitive."""
+        t = np.zeros((nea, 1), dtype=np.int8)
+        t[nea - 1, 0] = -1
+        return t
+
+    nv_final = len(plan.final_vertex_layout)
+    ne_final = len(plan.final_edge_layout)
+
+    def _expire(levels, l0, lo):
+        """End-of-tick deletion (paper §4.2): level-ordered top-down cascade
+        over MS-tree parent pointers; L0 rows checked directly on their
+        denormalized per-edge timestamps."""
+        new_levels = []
+        for sub in levels:
+            out = []
+            prev_valid = None
+            for j, t in enumerate(sub):
+                v = t.valid & (t.ts > lo)
+                if j > 0:
+                    v = v & jnp.take(prev_valid, jnp.maximum(t.parent, 0),
+                                     mode="clip")
+                out.append(t._replace(valid=v))
+                prev_valid = v
+            new_levels.append(tuple(out))
+        new_l0 = tuple(
+            t._replace(valid=t.valid & jnp.all(t.ets > lo, axis=1))
+            for t in l0
+        )
+        return tuple(new_levels), new_l0
+
+    def tick(state: EngineState, batch: EdgeBatch):
+        # -- 0. advance time; clear last tick's fresh marks ------------ #
+        # NOTE: expiry is deferred to the END of the tick.  Mid-tick, the
+        # window-span predicate inside every join plays the role of the
+        # paper's two-phase partial removal (§5.3): a row that expires at
+        # some intra-tick time is still joinable by earlier-timestamped
+        # batch edges and already invisible to later ones.
+        bt = jnp.where(batch.valid, batch.ts, jnp.iinfo(jnp.int32).min)
+        t_now = jnp.maximum(state.t_now, jnp.max(bt))
+        levels = tuple(
+            tuple(t._replace(fresh=jnp.zeros_like(t.fresh)) for t in sub)
+            for sub in state.levels
+        )
+        l0 = tuple(t._replace(fresh=jnp.zeros_like(t.fresh)) for t in state.l0)
+
+        n_overflow = jnp.zeros((), I32)
+
+        # -- 1. per-query-edge label match mask [n_qedges, B] ---------- #
+        no_selfloop = batch.src != batch.dst
+        ematch = (
+            batch.valid[None, :]
+            & no_selfloop[None, :]
+            & (batch.src_label[None, :] == esl[:, None])
+            & (batch.dst_label[None, :] == edl[:, None])
+            & ((eel[:, None] < 0) | (batch.edge_label[None, :] == eel[:, None]))
+        )
+        edge_used = jnp.any(ematch, axis=0)
+        n_discard = jnp.sum(batch.valid & ~edge_used, dtype=I32)
+
+        bbind = jnp.stack([batch.src, batch.dst], axis=1)  # [B, 2]
+        bets = batch.ts[:, None]
+
+        # round-robin ownership of level-1 appends across shards
+        if axis_name is not None:
+            my = jax.lax.axis_index(axis_name)
+            own1 = (jnp.arange(batch.src.shape[0]) % n_shards) == my
+        else:
+            own1 = jnp.ones(batch.src.shape, jnp.bool_)
+
+        # -- 2. subquery phase: level-ordered batched inserts ---------- #
+        recons: list[list[_View]] = []
+        new_levels = []
+        for si, s in enumerate(plan.subqueries):
+            sub = list(levels[si])
+            sub_recons: list[_View] = []
+            for li, lv in enumerate(s.levels):
+                em = ematch[lv.qedge]
+                if li == 0:
+                    t, nd = _append_level(
+                        sub[0], jnp.full_like(batch.src, -1),
+                        batch.src, batch.dst, batch.ts, em & own1)
+                    sub[0] = t
+                    n_overflow += nd
+                else:
+                    prev = sub_recons[li - 1]
+                    mask = J.compat_mask(
+                        prev.bind, prev.ets, prev.valid,
+                        bbind, bets, em,
+                        level_rel[(si, li)], _trel_chain(prev.ets.shape[1]),
+                        window, backend)
+                    a_idx, b_idx, pv, nd1 = J.extract_pairs(mask, lv.max_new)
+                    t, nd2 = _append_level(
+                        sub[li], a_idx,
+                        jnp.take(batch.src, b_idx, mode="clip"),
+                        jnp.take(batch.dst, b_idx, mode="clip"),
+                        jnp.take(batch.ts, b_idx, mode="clip"),
+                        pv)
+                    sub[li] = t
+                    n_overflow += nd1 + nd2
+                # reconstruct this level's denormalized view (post-append)
+                t = sub[li]
+                if li == 0:
+                    bind = jnp.stack([t.src, t.dst], axis=1)
+                    ets = t.ts[:, None]
+                else:
+                    p = jnp.maximum(t.parent, 0)
+                    prevv = sub_recons[li - 1]
+                    cols = [jnp.take(prevv.bind, p, axis=0)]
+                    own = []
+                    if lv.src_slot < 0:
+                        own.append(t.src[:, None])
+                    if lv.dst_slot < 0:
+                        own.append(t.dst[:, None])
+                    bind = jnp.concatenate(cols + own, axis=1)
+                    ets = jnp.concatenate(
+                        [jnp.take(prevv.ets, p, axis=0), t.ts[:, None]], axis=1)
+                sub_recons.append(_View(bind, ets, t.valid, t.fresh))
+            recons.append(sub_recons)
+            new_levels.append(tuple(sub))
+        levels = tuple(new_levels)
+
+        # -- 3. L_0 phase: delta joins across TC-subqueries ------------ #
+        new_l0 = []
+        a_view = recons[0][-1]  # L_0^1 ≡ P_1's final item (paper Fig. 8)
+        for gi, js in enumerate(plan.l0_joins):
+            b_view = recons[gi + 1][-1]
+            tbl = l0[gi]
+            d = js.max_new
+
+            # J1: ΔA ⋈ B (old ∪ Δ)
+            da, _, nd0 = _compact(a_view, a_view.fresh & a_view.valid, d)
+            if axis_name is not None:
+                da = _View(*(
+                    jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+                    for x in da))
+            m1 = J.compat_mask(
+                da.bind, da.ets, da.valid,
+                b_view.bind, b_view.ets, b_view.valid,
+                js.rel, js.trel, window, backend)
+            a1, b1, pv1, nd1 = J.extract_pairs(m1, d)
+            nb = jnp.take(b_view.bind, b1, axis=0, mode="clip")
+            out_bind1 = jnp.concatenate(
+                [jnp.take(da.bind, a1, axis=0, mode="clip")]
+                + ([nb[:, list(js.b_new_vertex_slots)]]
+                   if js.b_new_vertex_slots else []),
+                axis=1)
+            out_ets1 = jnp.concatenate(
+                [jnp.take(da.ets, a1, axis=0, mode="clip"),
+                 jnp.take(b_view.ets, b1, axis=0, mode="clip")], axis=1)
+            tbl, nd2 = _append_l0(tbl, out_bind1, out_ets1, pv1)
+
+            # J2: A_old ⋈ ΔB
+            db, _, nd3 = _compact(b_view, b_view.fresh & b_view.valid, d)
+            if axis_name is not None:
+                db = _View(*(
+                    jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+                    for x in db))
+            m2 = J.compat_mask(
+                a_view.bind, a_view.ets, a_view.valid & ~a_view.fresh,
+                db.bind, db.ets, db.valid,
+                js.rel, js.trel, window, backend)
+            a2, b2, pv2, nd4 = J.extract_pairs(m2, d)
+            nb2 = jnp.take(db.bind, b2, axis=0, mode="clip")
+            out_bind2 = jnp.concatenate(
+                [jnp.take(a_view.bind, a2, axis=0, mode="clip")]
+                + ([nb2[:, list(js.b_new_vertex_slots)]]
+                   if js.b_new_vertex_slots else []),
+                axis=1)
+            out_ets2 = jnp.concatenate(
+                [jnp.take(a_view.ets, a2, axis=0, mode="clip"),
+                 jnp.take(db.ets, b2, axis=0, mode="clip")], axis=1)
+            tbl, nd5 = _append_l0(tbl, out_bind2, out_ets2, pv2)
+
+            n_overflow += nd0 + nd1 + nd2 + nd3 + nd4 + nd5
+            new_l0.append(tbl)
+            a_view = _View(tbl.bindings, tbl.ets, tbl.valid, tbl.fresh)
+        l0 = tuple(new_l0)
+
+        # -- 4. emit (before end-of-tick expiry: a match created mid-tick
+        #       is reported even if it expires within the same tick,
+        #       matching sequential replay) --------------------------- #
+        final = a_view
+        new_mask = final.fresh & final.valid
+        n_new = jnp.sum(new_mask, dtype=I32)
+        if axis_name is not None:
+            n_new = jax.lax.psum(n_new, axis_name)
+        if extract_matches:
+            out, _, nd = _compact(final, new_mask, max_out)
+            mb, me, mv = out.bind, out.ets, out.valid
+            n_overflow += nd
+        else:
+            mb = jnp.zeros((max_out, nv_final), I32)
+            me = jnp.zeros((max_out, ne_final), I32)
+            mv = jnp.zeros((max_out,), jnp.bool_)
+
+        # -- 5. end-of-tick expiry ------------------------------------- #
+        levels, l0 = _expire(levels, l0, t_now - window)
+
+        if axis_name is not None:
+            n_overflow = jax.lax.psum(n_overflow, axis_name)
+            n_discard = jax.lax.psum(n_discard, axis_name) // n_shards
+
+        stats = EngineStats(
+            n_matches_total=state.stats.n_matches_total + n_new,
+            n_overflow=state.stats.n_overflow + n_overflow,
+            n_edges_processed=state.stats.n_edges_processed
+            + jnp.sum(batch.valid, dtype=I32),
+            n_edges_discarded=state.stats.n_edges_discarded + n_discard,
+        )
+        new_state = EngineState(levels=levels, l0=l0, t_now=t_now, stats=stats)
+        return new_state, TickResult(n_new, n_overflow, mb, me, mv)
+
+    return tick
+
+
+def current_matches(plan: ExecutionPlan, state: EngineState):
+    """All complete matches in the current window (host-side; for tests).
+
+    Returns a set of frozensets of ``(query_edge_id, (src, dst, ts))``.
+    """
+    q = plan.query
+    if plan.l0_joins:
+        tbl = state.l0[-1]
+        bind = np.asarray(tbl.bindings)
+        ets = np.asarray(tbl.ets)
+        valid = np.asarray(tbl.valid)
+    else:
+        # reconstruct the single subquery's final level on host
+        s = plan.subqueries[0]
+        sub = state.levels[0]
+        bind, ets = None, None
+        for li, lv in enumerate(s.levels):
+            t = sub[li]
+            src = np.asarray(t.src)[:, None]
+            dst = np.asarray(t.dst)[:, None]
+            ts = np.asarray(t.ts)[:, None]
+            if li == 0:
+                bind = np.concatenate([src, dst], axis=1)
+                ets = ts
+            else:
+                p = np.maximum(np.asarray(t.parent), 0)
+                own = []
+                if lv.src_slot < 0:
+                    own.append(src)
+                if lv.dst_slot < 0:
+                    own.append(dst)
+                bind = np.concatenate([bind[p]] + own, axis=1)
+                ets = np.concatenate([ets[p], ts], axis=1)
+        valid = np.asarray(sub[-1].valid)
+
+    vlayout = plan.final_vertex_layout
+    elayout = plan.final_edge_layout
+    out = set()
+    for r in np.nonzero(valid)[0]:
+        v_of = {vl: int(bind[r, i]) for i, vl in enumerate(vlayout)}
+        t_of = {el: int(ets[r, i]) for i, el in enumerate(elayout)}
+        match = frozenset(
+            (e, (v_of[q.edges[e][0]], v_of[q.edges[e][1]], t_of[e]))
+            for e in range(q.n_edges)
+        )
+        out.add(match)
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _noop(x):  # pragma: no cover - placeholder to keep jax import warm
+    return x

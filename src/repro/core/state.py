@@ -1,0 +1,133 @@
+"""Device-side state: fixed-capacity partial-match tables.
+
+Two storage regimes, mirroring the paper's ablation:
+
+* **MS-tree mode** (``LevelTable``, Section 4): each expansion-list item
+  ``L_i^j`` stores only the *new* edge of each partial match — (src, dst,
+  ts) — plus a parent pointer into ``L_i^{j-1}``.  A partial match is the
+  root-to-node path, exactly the paper's trie-variant; full bindings are
+  reconstructed transiently inside the tick by a parent-pointer gather
+  chain (the "backtrack" of Section 4.2, vectorized).
+
+* **IND mode** (Timing-IND baseline in the paper's §6.3): bindings and
+  per-edge timestamps are stored denormalized.  The global expansion list
+  ``L_0`` always stores denormalized rows (``L0Table``): its rows combine
+  parents from *different shards* under data-parallel execution, so
+  parent pointers would break shard locality (hardware adaptation,
+  DESIGN.md §Adaptations).
+
+All tables are NamedTuples of arrays — JAX pytrees, shard_map friendly.
+The capacity axis is the sharded axis in distributed mode.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.plan import ExecutionPlan
+
+I32 = jnp.int32
+
+
+class LevelTable(NamedTuple):
+    """MS-tree node storage for one expansion-list item ``L_i^j``."""
+
+    src: jnp.ndarray      # int32 [C]  data vertex matched to the level edge's src
+    dst: jnp.ndarray      # int32 [C]
+    ts: jnp.ndarray       # int32 [C]  timestamp of the matched data edge
+    parent: jnp.ndarray   # int32 [C]  row in L_i^{j-1}; -1 at level 1
+    valid: jnp.ndarray    # bool  [C]
+    fresh: jnp.ndarray    # bool  [C]  appended during the current tick
+
+
+class L0Table(NamedTuple):
+    """Denormalized row storage for a global expansion-list item ``L_0^i``."""
+
+    bindings: jnp.ndarray  # int32 [C, nv]
+    ets: jnp.ndarray       # int32 [C, ne]  per-query-edge timestamps
+    valid: jnp.ndarray     # bool  [C]
+    fresh: jnp.ndarray     # bool  [C]
+
+
+class EngineStats(NamedTuple):
+    n_matches_total: jnp.ndarray    # int32 scalar
+    n_overflow: jnp.ndarray         # int32 scalar: dropped appends (capacity)
+    n_edges_processed: jnp.ndarray  # int32 scalar
+    n_edges_discarded: jnp.ndarray  # int32 scalar: matched no query edge / pruned
+
+
+class EngineState(NamedTuple):
+    levels: tuple          # tuple[tuple[LevelTable, ...], ...]  per subquery
+    l0: tuple              # tuple[L0Table, ...]  for join sites 2..k
+    t_now: jnp.ndarray     # int32 scalar, current stream time
+    stats: EngineStats
+
+
+def _empty_level(capacity: int) -> LevelTable:
+    c = capacity
+    return LevelTable(
+        src=jnp.zeros((c,), I32),
+        dst=jnp.zeros((c,), I32),
+        ts=jnp.zeros((c,), I32),
+        parent=jnp.full((c,), -1, I32),
+        valid=jnp.zeros((c,), jnp.bool_),
+        fresh=jnp.zeros((c,), jnp.bool_),
+    )
+
+
+def _empty_l0(capacity: int, nv: int, ne: int) -> L0Table:
+    return L0Table(
+        bindings=jnp.zeros((capacity, nv), I32),
+        ets=jnp.zeros((capacity, ne), I32),
+        valid=jnp.zeros((capacity,), jnp.bool_),
+        fresh=jnp.zeros((capacity,), jnp.bool_),
+    )
+
+
+def init_state(plan: ExecutionPlan) -> EngineState:
+    levels = tuple(
+        tuple(_empty_level(lv.capacity) for lv in s.levels)
+        for s in plan.subqueries
+    )
+    l0 = tuple(
+        _empty_l0(js.capacity, len(js.vertex_layout), len(js.edge_layout))
+        for js in plan.l0_joins
+    )
+    zero = jnp.zeros((), I32)
+    return EngineState(
+        levels=levels,
+        l0=l0,
+        t_now=jnp.zeros((), I32),
+        stats=EngineStats(zero, zero, zero, zero),
+    )
+
+
+class EdgeBatch(NamedTuple):
+    """A tick's worth of stream edges (padded; ``valid`` marks real rows).
+
+    Timestamps must be non-decreasing across consecutive ticks; within a
+    tick they may interleave arbitrarily (the engine's level-ordered
+    batched schedule, Section 5 adaptation, restores exact streaming-
+    consistency semantics regardless of intra-tick order).
+    """
+
+    src: jnp.ndarray        # int32 [B] data vertex id
+    dst: jnp.ndarray        # int32 [B]
+    ts: jnp.ndarray         # int32 [B]
+    src_label: jnp.ndarray  # int32 [B]
+    dst_label: jnp.ndarray  # int32 [B]
+    edge_label: jnp.ndarray  # int32 [B]
+    valid: jnp.ndarray      # bool  [B]
+
+
+def make_batch(src, dst, ts, src_label, dst_label, edge_label, valid=None) -> EdgeBatch:
+    a = lambda x: jnp.asarray(x, I32)
+    src = a(src)
+    if valid is None:
+        valid = jnp.ones(src.shape, jnp.bool_)
+    return EdgeBatch(
+        src, a(dst), a(ts), a(src_label), a(dst_label), a(edge_label),
+        jnp.asarray(valid, jnp.bool_),
+    )

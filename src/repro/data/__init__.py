@@ -1,0 +1,10 @@
+"""Data pipelines: deterministic synthetic sources for LM, GNN, recsys.
+
+Every source is a pure function of (config, step) so fault-tolerant
+replay after restart reproduces the exact same batches — the property
+the recovery tests assert.
+"""
+
+from repro.data.lm import lm_batch
+from repro.data.graphs import synth_cora_like, synth_products_like
+from repro.data.recsys import recsys_batch

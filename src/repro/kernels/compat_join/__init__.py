@@ -1,0 +1,1 @@
+from repro.kernels.compat_join.ops import compat_mask

@@ -1,0 +1,49 @@
+"""Public jit'd wrapper for the compat_join Pallas kernel.
+
+Handles: padding the capacity axes to tile multiples (padded rows carry
+valid=0 so they never match), int32 casting of the bool valid masks, and
+the interpret switch for CPU validation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.kernels.compat_join.kernel import TILE_A, TILE_B, compat_mask_kernel
+
+
+def _pad_to(x, n, axis=0):
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def compat_mask(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel,
+                window=None, interpret: bool = False):
+    """Drop-in replacement for ``core.join.compat_mask_ref`` -> bool [CA, CB]."""
+    ca, cb = bind_a.shape[0], bind_b.shape[0]
+    cap = _ceil_to(max(ca, 1), TILE_A)
+    cbp = _ceil_to(max(cb, 1), TILE_B)
+
+    out = compat_mask_kernel(
+        _pad_to(bind_a.astype(jnp.int32), cap),
+        _pad_to(ets_a.astype(jnp.int32), cap),
+        _pad_to(valid_a.astype(jnp.int32), cap),
+        _pad_to(bind_b.astype(jnp.int32), cbp),
+        _pad_to(ets_b.astype(jnp.int32), cbp),
+        _pad_to(valid_b.astype(jnp.int32), cbp),
+        rel=tuple(map(tuple, rel.tolist())),
+        trel=tuple(map(tuple, trel.tolist())),
+        window=int(window) if window is not None else None,
+        interpret=interpret,
+    )
+    return out[:ca, :cb].astype(jnp.bool_)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the compat_join kernel (same code path the engine
+uses as its reference backend)."""
+
+from repro.core.join import compat_mask_ref
+
+
+def compat_mask(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel,
+                window=None):
+    return compat_mask_ref(
+        bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel, window)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: EmbeddingBag (multi-hot gather + segment-sum).
+
+JAX has no native EmbeddingBag; the TPU-native pattern is *scalar-
+prefetched data-dependent BlockSpecs*: the flat id list is prefetched as
+a scalar operand, and the embedding TABLE's index_map reads ids[i] — so
+each grid step DMAs exactly the one table row it needs from HBM into
+VMEM (rows pipeline across steps).  Bags are contiguous in the flat id
+list (sorted by bag), so the output bag row is revisited consecutively
+and accumulates in VMEM, FBGEMM-TBE style.
+
+Grid: (total_ids,)
+  table block [1, D]  — row chosen by ids[i] (data-dependent index map)
+  out   block [1, D]  — row chosen by bag[i]; zeroed on first visit
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, bags_ref, first_ref, table_row_ref, out_row_ref):
+    i = pl.program_id(0)
+
+    @pl.when(first_ref[i] > 0)
+    def _init():
+        out_row_ref[...] = jnp.zeros_like(out_row_ref)
+
+    @pl.when(ids_ref[i] >= 0)
+    def _acc():
+        out_row_ref[...] += table_row_ref[...]
+
+
+def embedding_bag_kernel(
+    ids: jnp.ndarray,     # int32 [T] flat ids, -1 = padding (skipped)
+    bags: jnp.ndarray,    # int32 [T] bag id per flat id, sorted ascending
+    first: jnp.ndarray,   # int32 [T] 1 where bags[i] != bags[i-1]
+    table: jnp.ndarray,   # [V, D] float
+    n_bags: int,
+    interpret: bool = False,
+):
+    t = ids.shape[0]
+    d = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(t,),
+        in_specs=[
+            # table row picked by the prefetched id (clamped for padding)
+            pl.BlockSpec(
+                (1, d), lambda i, ids, bags, first: (jnp.maximum(ids[i], 0), 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, d), lambda i, ids, bags, first: (bags[i], 0)
+        ),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, d), table.dtype),
+        interpret=interpret,
+    )(ids, bags, first, table)

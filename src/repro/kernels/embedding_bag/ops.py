@@ -1,0 +1,26 @@
+"""Public EmbeddingBag wrapper: bag layout preparation + backend switch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag import ref
+from repro.kernels.embedding_bag.kernel import embedding_bag_kernel
+
+
+def embedding_bag(ids, bags, table, n_bags: int, backend: str = "xla"):
+    """sum-mode EmbeddingBag over a flat (ids, bags) layout.
+
+    ids  int32 [T]: table rows, -1 = padding (contributes zero)
+    bags int32 [T]: destination bag per id, sorted ascending
+    """
+    if backend == "xla":
+        return ref.embedding_bag(ids, bags, table, n_bags)
+    ids = ids.astype(jnp.int32)
+    bags = bags.astype(jnp.int32)
+    first = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32),
+         (bags[1:] != bags[:-1]).astype(jnp.int32)])
+    return embedding_bag_kernel(
+        ids, bags, first, table, n_bags,
+        interpret=(backend == "pallas_interpret"))

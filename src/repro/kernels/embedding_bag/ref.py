@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for embedding_bag: take + segment_sum."""
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(ids, bags, table, n_bags):
+    """sum-mode EmbeddingBag.
+
+    ids: int32 [T] (-1 padding), bags: int32 [T], table: [V, D].
+    Returns [n_bags, D].
+    """
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    rows = jnp.where((ids >= 0)[:, None], rows, 0)
+    seg = jnp.where(ids >= 0, bags, n_bags)
+    return jax.ops.segment_sum(rows, seg, num_segments=n_bags + 1)[:n_bags]

@@ -1,0 +1,38 @@
+"""Public wrappers for segment_reduce: padding + backend switch.
+
+``backend``: "xla" uses jax.ops.segment_sum (XLA scatter — the fallback
+and CPU path), "pallas"/"pallas_interpret" the blocked one-hot-MXU
+kernel.  Both share the ref semantics; kernels/tests sweep agreement.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce import ref
+from repro.kernels.segment_reduce.kernel import TILE_E, TILE_N, segment_sum_kernel
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((max(x, 1) + m - 1) // m) * m
+
+
+def segment_sum(dst, msg, n_nodes: int, backend: str = "xla"):
+    if backend == "xla":
+        return ref.segment_sum(dst, msg, n_nodes)
+    e = dst.shape[0]
+    ep = _ceil_to(e, TILE_E)
+    np_ = _ceil_to(n_nodes, TILE_N)
+    dst_p = jnp.full((ep,), -1, jnp.int32).at[:e].set(
+        jnp.where(dst < 0, -1, dst).astype(jnp.int32))
+    msg_p = jnp.zeros((ep, msg.shape[1]), msg.dtype).at[:e].set(msg)
+    out = segment_sum_kernel(
+        dst_p, msg_p, np_, interpret=(backend == "pallas_interpret"))
+    return out[:n_nodes]
+
+
+def segment_mean(dst, msg, n_nodes: int, backend: str = "xla", eps=1e-9):
+    s = segment_sum(dst, msg, n_nodes, backend)
+    ones = jnp.ones((msg.shape[0], 1), msg.dtype)
+    cnt = segment_sum(dst, ones, n_nodes, backend)
+    return s / jnp.maximum(cnt, eps)

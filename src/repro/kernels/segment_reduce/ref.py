@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for segment_reduce: jax.ops.segment_sum semantics."""
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(dst, msg, n_nodes):
+    """Sum messages into their dst segment; negative ids are dropped."""
+    return jax.ops.segment_sum(
+        msg, jnp.where(dst < 0, n_nodes, dst), num_segments=n_nodes + 1
+    )[:n_nodes]
+
+
+def segment_mean(dst, msg, n_nodes, eps=1e-9):
+    s = segment_sum(dst, msg, n_nodes)
+    ones = jnp.ones((msg.shape[0], 1), msg.dtype)
+    cnt = segment_sum(dst, ones, n_nodes)
+    return s / jnp.maximum(cnt, eps)

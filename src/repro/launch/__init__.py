@@ -1,0 +1,1 @@
+"""Launch layer: mesh construction, cell builders, dry-run, drivers."""

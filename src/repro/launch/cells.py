@@ -1,0 +1,426 @@
+"""Cell builders: (architecture × input shape × mesh) -> lowerable step.
+
+A *cell* bundles everything the dry-run / drivers need:
+  fn            the step function (train_step / serve_step / ...)
+  args          ShapeDtypeStruct pytree (``input_specs()``: weak-type
+                correct, shardable, no device allocation)
+  in_shardings  NamedSharding pytree matching ``args``
+  out_shardings NamedSharding / None pytree
+  donate        arg indices donated (params/opt/caches)
+  meta          model-FLOPs estimate terms for the roofline report
+
+The same step constructors serve the per-arch smoke tests (reduced
+configs, real arrays, no mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCHS, ArchSpec, ShapeSpec
+from repro.models.common import MeshAxes
+from repro.models import transformer as tfm
+from repro.models.gnn import models as gnn
+from repro.models.gnn import nequip as nq
+from repro.models.gnn.sampler import subgraph_shapes
+from repro.models.recsys import wide_deep as wd
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import state_specs as adamw_state_specs
+
+SDS = jax.ShapeDtypeStruct
+I32 = jnp.int32
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate: tuple
+    meta: dict
+    skip_reason: str | None = None
+
+
+def _ns(mesh, spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ===================================================================== #
+# LM cells
+# ===================================================================== #
+def make_lm_train_step(cfg, ocfg: AdamWConfig, microbatches: int,
+                       lr: float = 1e-4, axes=None):
+    from repro.models.common import constrain
+
+    def train_step(params, opt_state, tokens):
+        gb, seq = tokens.shape
+        acc_dtype = cfg.param_dtype
+
+        def gloss(p, toks):
+            (l, _), g = jax.value_and_grad(
+                tfm.loss_fn, has_aux=True)(p, toks, cfg, axes)
+            return l, g
+
+        if microbatches > 1:
+            mbs = tokens.reshape(microbatches, gb // microbatches, seq)
+            mbs = constrain(mbs, axes, None, "dp", None)
+
+            def micro(acc, toks):
+                l, g = gloss(params, toks)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), acc, g)
+                return acc, l
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            acc, losses = jax.lax.scan(micro, acc0, mbs)
+            grads = jax.tree.map(lambda a: a / microbatches, acc)
+            loss = losses.mean()
+        else:
+            loss, grads = gloss(params, tokens)
+        params, opt_state, st = adamw_update(
+            grads, opt_state, params, lr, ocfg)
+        return params, opt_state, loss, st["grad_norm"]
+
+    return train_step
+
+
+def lm_param_flops(cfg) -> tuple[int, int]:
+    """(total params, active params) — MoE counts top-k experts only."""
+    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim \
+        + cfg.n_heads * cfg.head_dim * d
+    if cfg.moe:
+        ffn_total = cfg.n_experts * 3 * d * f + d * cfg.n_experts
+        ffn_active = cfg.moe_topk * 3 * d * f + d * cfg.n_experts
+        if cfg.dense_residual:
+            rf = cfg.residual_d_ff or f
+            ffn_total += 3 * d * rf
+            ffn_active += 3 * d * rf
+    else:
+        ffn_total = ffn_active = 3 * d * f
+    total = L * (attn + ffn_total) + 2 * v * d
+    active = L * (attn + ffn_active) + 2 * v * d
+    return total, active
+
+
+def _lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg = arch.config
+    axes = MeshAxes.for_mesh(mesh) if mesh else MeshAxes()
+    ocfg = AdamWConfig(state_mode=arch.opt_state_mode)
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(functools.partial(tfm.init, cfg=cfg), key)
+    pspecs = tfm.param_specs(cfg, axes)
+    total, active = lm_param_flops(cfg)
+    gb, seq = shape.global_batch, shape.seq_len
+    dp_size = (np.prod([mesh.shape[a] for a in
+                        (axes.dp if isinstance(axes.dp, tuple) else (axes.dp,))])
+               if mesh else 1)
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(lambda p: adamw_init(p, ocfg), params_sds)
+        ospecs = adamw_state_specs(pspecs, params_sds, ocfg)
+        tokens = SDS((gb, seq), I32)
+        fn = make_lm_train_step(cfg, ocfg, shape.microbatches,
+                                axes=axes if mesh else None)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs),
+                 _ns(mesh, P(axes.dp, None)))
+        out_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs),
+                  _ns(mesh, P()), _ns(mesh, P()))
+        meta = dict(model_flops=6 * active * gb * seq,
+                    params_total=total, params_active=active,
+                    tokens=gb * seq)
+        return Cell(arch.arch_id, shape.name, fn,
+                    (params_sds, opt_sds, tokens), in_sh, out_sh,
+                    donate=(0, 1), meta=meta,
+                    skip_reason=shape.skip_reason)
+
+    if shape.kind == "prefill":
+        tokens = SDS((gb, seq), I32)
+        fn = functools.partial(tfm.prefill, cfg=cfg,
+                               axes=axes if mesh else None)
+        kv_out = P(None, axes.dp, axes.tp, None, None)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, P(axes.dp, None)))
+        out_sh = (_ns(mesh, P(axes.dp, axes.tp)),
+                  _ns(mesh, kv_out), _ns(mesh, kv_out))
+        meta = dict(model_flops=2 * active * gb * seq
+                    + 2 * gb * cfg.n_layers * cfg.n_heads
+                    * cfg.head_dim * seq * seq,   # attention term
+                    params_total=total, tokens=gb * seq)
+        return Cell(arch.arch_id, shape.name, fn, (params_sds, tokens),
+                    in_sh, out_sh, donate=(), meta=meta,
+                    skip_reason=shape.skip_reason)
+
+    # decode: one token against a seq_len cache
+    smax = seq
+    cdt = jnp.bfloat16
+    kc = SDS((cfg.n_layers, gb, smax, cfg.n_kv_heads, cfg.head_dim), cdt)
+    vc = kc
+    length = SDS((gb,), I32)
+    tokens = SDS((gb, 1), I32)
+    # Serving rule: weights stay 2D-sharded and STATIONARY; the tiny
+    # per-token activations are replicated (tokens/length/logits carry no
+    # dp sharding).  Sharding the decode batch over 'data' makes GSPMD
+    # all-gather every layer's weights instead (66 GB of wire per token
+    # at deepseek scale — EXPERIMENTS.md §Perf, decode iteration).
+    if mesh and gb < dp_size:
+        seq_axes = tuple(axes.dp if isinstance(axes.dp, tuple)
+                         else (axes.dp,)) + (axes.tp,)
+        kv_spec = P(None, None, seq_axes, None, None)
+    else:
+        kv_spec = P(None, axes.dp, axes.tp, None, None)
+    tok_spec = P(None, None)
+    len_spec = P(None)
+
+    def fn(params, tokens, kc, vc, length):
+        logits, (nk, nv, nl) = tfm.serve_step(
+            params, tokens, (kc, vc, length), cfg)
+        return logits, nk, nv, nl
+
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, tok_spec), _ns(mesh, kv_spec),
+             _ns(mesh, kv_spec), _ns(mesh, len_spec))
+    out_sh = (_ns(mesh, P(None, None)), _ns(mesh, kv_spec),
+              _ns(mesh, kv_spec), _ns(mesh, len_spec))
+    # decode model flops: 2*active per token + KV attention reads
+    attn_flops = 4 * gb * cfg.n_layers * cfg.n_heads * cfg.head_dim * smax
+    meta = dict(model_flops=2 * active * gb + attn_flops,
+                params_total=total, tokens=gb,
+                kv_bytes=2 * cfg.n_layers * gb * smax * cfg.n_kv_heads
+                * cfg.head_dim * 2)
+    return Cell(arch.arch_id, shape.name, fn,
+                (params_sds, tokens, kc, vc, length), in_sh, out_sh,
+                donate=(2, 3), meta=meta, skip_reason=shape.skip_reason)
+
+
+# ===================================================================== #
+# GNN cells
+# ===================================================================== #
+def _pad_up(x: int, m: int = 512) -> int:
+    """Pad a sharded leading dim to a multiple of the largest mesh size
+    (512) — argument shardings must divide exactly; padding slots carry
+    -1 sentinels and contribute nothing."""
+    return ((x + m - 1) // m) * m
+
+
+def _graph_sds(shape: ShapeSpec, for_nequip: bool):
+    ex = shape.extra
+    if shape.name == "minibatch_lg":
+        n, e = subgraph_shapes(ex["batch_nodes"], tuple(ex["fanout"]))
+    elif shape.name == "molecule":
+        n = ex["n_nodes"] * ex["batch"]
+        e = ex["n_edges"] * ex["batch"]
+    else:
+        n, e = ex["n_nodes"], ex["n_edges"]
+    e = _pad_up(e)
+    g = {
+        "edge_src": SDS((e,), I32),
+        "edge_dst": SDS((e,), I32),
+    }
+    if for_nequip:
+        g["species"] = SDS((n,), I32)
+        g["pos"] = SDS((n, 3), jnp.float32)
+    else:
+        g["x"] = SDS((n, ex["d_feat"]), jnp.float32)
+        g["labels"] = SDS((n,), I32)
+    if shape.name == "molecule":
+        g["graph_ids"] = SDS((n,), I32)
+        if for_nequip:
+            g["energy"] = SDS((ex["batch"],), jnp.float32)
+        else:
+            g["graph_labels"] = SDS((ex["batch"],), I32)
+    elif for_nequip:
+        g["energy"] = SDS((1,), jnp.float32)
+    if shape.name == "minibatch_lg" and not for_nequip:
+        g["label_mask"] = SDS((n,), jnp.bool_)
+    return g, n, e
+
+
+def _graph_specs(g, mesh, axes):
+    """Edges sharded over every mesh axis (flat); node arrays replicated."""
+    if mesh is None:
+        return None
+    all_axes = tuple(mesh.axis_names)
+    spec = {}
+    for k, v in g.items():
+        if k.startswith("edge_"):
+            spec[k] = P(all_axes)
+        else:
+            spec[k] = P(*([None] * v.ndim))
+    return _ns(mesh, spec)
+
+
+def make_gnn_train_step(cfg, loss, ocfg: AdamWConfig, lr: float = 1e-3):
+    def train_step(params, opt_state, g):
+        (l, _), grads = jax.value_and_grad(
+            lambda p: loss(p, g, cfg), has_aux=True)(params)
+        params, opt_state, st = adamw_update(
+            grads, opt_state, params, lr, ocfg)
+        return params, opt_state, l, st["grad_norm"]
+
+    return train_step
+
+
+def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    is_nq = arch.family == "nequip"
+    ex = shape.extra
+    # full-batch-large shapes: shard node-dim activations over the whole
+    # mesh and remat per layer (otherwise 20-80 GB/device of replicated
+    # per-layer node tensors — EXPERIMENTS.md §Perf, GNN iteration)
+    big = shape.name in ("ogb_products", "minibatch_lg")
+    mesh_axes = tuple(mesh.axis_names) if (mesh and big) else None
+    if is_nq:
+        cfg = dataclasses.replace(
+            arch.config, mesh_axes=mesh_axes, remat=big)
+        init_fn = functools.partial(nq.init, cfg=cfg)
+        loss = nq.mse_loss
+    else:
+        base = arch.config
+        # mixed precision on the large shapes: bf16 activations halve the
+        # gather/scatter transients of full-batch-large training
+        cfg = dataclasses.replace(
+            base, d_in=ex["d_feat"], n_classes=ex["n_classes"],
+            mesh_axes=mesh_axes, remat=big,
+            dtype=jnp.bfloat16 if big else base.dtype)
+        init_fn = functools.partial(gnn.INITS[base.arch], cfg=cfg)
+        loss = gnn.node_classification_loss
+    ocfg = AdamWConfig(state_mode="fp32")
+    params_sds = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    pspecs = jax.tree.map(lambda _: P(), params_sds)
+    opt_sds = jax.eval_shape(lambda p: adamw_init(p, ocfg), params_sds)
+    ospecs = adamw_state_specs(pspecs, params_sds, ocfg)
+
+    g, n, e = _graph_sds(shape, is_nq)
+    if shape.name == "molecule":
+        g2 = dict(g)
+        # n_graphs must be static: pass via closure
+    axes = MeshAxes.for_mesh(mesh) if mesh else MeshAxes()
+
+    ng = ex.get("batch", 1)
+
+    def loss_with_static(p, graph, c):
+        graph = dict(graph)
+        if shape.name == "molecule":
+            graph["n_graphs"] = ng
+        return loss(p, graph, c)
+
+    fn = make_gnn_train_step(cfg, loss_with_static, ocfg)
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs), _graph_specs(g, mesh, axes))
+    out_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, P()),
+              _ns(mesh, P()))
+    d_h = getattr(cfg, "d_hidden", getattr(cfg, "channels", 32))
+    layers = cfg.n_layers
+    # model flops: fwd+bwd of per-edge message (2*d_h^2-ish) + node MLPs
+    meta = dict(model_flops=6 * layers * (e * d_h * d_h + n * d_h * d_h),
+                n_nodes=n, n_edges=e)
+    return Cell(arch.arch_id, shape.name, fn, (params_sds, opt_sds, g),
+                in_sh, out_sh, donate=(0, 1), meta=meta,
+                skip_reason=shape.skip_reason)
+
+
+# ===================================================================== #
+# RecSys cells
+# ===================================================================== #
+def make_recsys_train_step(cfg, ocfg: AdamWConfig, lr: float = 1e-3):
+    def train_step(params, opt_state, batch):
+        (l, _), grads = jax.value_and_grad(
+            wd.bce_loss, has_aux=True)(params, batch, cfg)
+        params, opt_state, st = adamw_update(
+            grads, opt_state, params, lr, ocfg)
+        return params, opt_state, l, st["grad_norm"]
+
+    return train_step
+
+
+def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg = arch.config
+    axes = MeshAxes.for_mesh(mesh) if mesh else MeshAxes()
+    ocfg = AdamWConfig(state_mode="factored")
+    b = shape.global_batch
+
+    if shape.kind == "retrieval":
+        nc = _pad_up(shape.extra["n_candidates"])
+        user = SDS((cfg.embed_dim,), jnp.float32)
+        cands = SDS((nc, cfg.embed_dim), jnp.float32)
+        fn = functools.partial(wd.retrieval_score, top_k=100)
+        all_axes = tuple(mesh.axis_names) if mesh else ()
+        in_sh = (_ns(mesh, P(None)), _ns(mesh, P(all_axes, None)))
+        out_sh = (_ns(mesh, P(None)), _ns(mesh, P(None)))
+        meta = dict(model_flops=2 * nc * cfg.embed_dim, n_candidates=nc)
+        return Cell(arch.arch_id, shape.name, fn, (user, cands), in_sh,
+                    out_sh, donate=(), meta=meta,
+                    skip_reason=shape.skip_reason)
+
+    batch = {
+        "sparse_ids": SDS((b, cfg.n_sparse), I32),
+        "dense": SDS((b, cfg.n_dense), jnp.float32),
+        "wide_ids": SDS((b, cfg.n_wide_crosses), I32),
+        "labels": SDS((b,), I32),
+    }
+    bspec = {
+        "sparse_ids": P(axes.dp, None), "dense": P(axes.dp, None),
+        "wide_ids": P(axes.dp, None), "labels": P(axes.dp),
+    }
+    params_sds = jax.eval_shape(
+        functools.partial(wd.init, cfg=cfg), jax.random.PRNGKey(0))
+    pspecs = wd.param_specs(cfg, axes)
+    mlp_flops = 0
+    d = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    for h in cfg.mlp:
+        mlp_flops += 2 * d * h
+        d = h
+    embed_bytes = cfg.n_sparse * cfg.embed_dim * 4
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(lambda p: adamw_init(p, ocfg), params_sds)
+        ospecs = adamw_state_specs(pspecs, params_sds, ocfg)
+        fn = make_recsys_train_step(cfg, ocfg)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspec))
+        out_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, P()),
+                  _ns(mesh, P()))
+        meta = dict(model_flops=6 * b * mlp_flops // 2,
+                    embed_bytes=3 * b * embed_bytes)
+        return Cell(arch.arch_id, shape.name, fn,
+                    (params_sds, opt_sds, batch), in_sh, out_sh,
+                    donate=(0, 1), meta=meta, skip_reason=shape.skip_reason)
+
+    fn = functools.partial(wd.forward, cfg=cfg)
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, bspec))
+    out_sh = _ns(mesh, P(axes.dp))
+    meta = dict(model_flops=b * mlp_flops, embed_bytes=b * embed_bytes)
+    return Cell(arch.arch_id, shape.name, fn, (params_sds, batch), in_sh,
+                out_sh, donate=(), meta=meta, skip_reason=shape.skip_reason)
+
+
+# ===================================================================== #
+def build_cell(arch_id: str, shape_name: str, mesh) -> Cell:
+    arch = ARCHS[arch_id]
+    shape = arch.shape(shape_name)
+    if arch.family == "lm":
+        return _lm_cell(arch, shape, mesh)
+    if arch.family in ("gnn", "nequip"):
+        return _gnn_cell(arch, shape, mesh)
+    if arch.family == "recsys":
+        return _recsys_cell(arch, shape, mesh)
+    raise ValueError(arch.family)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for aid, arch in ARCHS.items():
+        for s in arch.shapes:
+            out.append((aid, s.name))
+    return out

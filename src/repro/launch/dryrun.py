@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_disable_hlo_passes=while-loop-invariant-code-motion,while-loop-expensive-invariant-code-motion"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production meshes and extract memory/cost/collective analyses.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only this process should see 512 virtual CPU devices.
+
+The extra ``--xla_disable_hlo_passes`` entries work around a CPU-backend
+analysis artifact: XLA:CPU lowers bf16 dots via fp32 converts and its
+while-loop invariant-code-motion then hoists a convert of the ENTIRE
+remat carry stack out of the backward loop, double-charging it in fp32
+(+11.6 GB/device at deepseek-33b scale).  TPU backends execute bf16 dots
+natively, so neither the converts nor the hoist exist there.  Measured
+in EXPERIMENTS.md §Perf iteration 0.
+
+Usage:
+    python -m repro.launch.dryrun --arch gat-cora --shape full_graph_sm
+    python -m repro.launch.dryrun --all [--multi-pod] [--force]
+Results: benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.launch.cells import all_cells, build_cell       # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch import roofline as RL                     # noqa: E402
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results",
+    "dryrun")
+
+
+def _bf16_emulation_bytes(hlo_text: str) -> int:
+    """XLA:CPU lowers bf16 dots via fp32 operand copies; estimate the
+    resulting fp32 'twin' buffers (an fp32 tensor whose shape also exists
+    as bf16, >100 MB).  TPU backends execute bf16 natively, so the
+    TPU-native peak estimate subtracts these (recorded, not hidden)."""
+    import re as _re
+
+    shapes = {"f32": set(), "bf16": set()}
+    for m in _re.finditer(r"(f32|bf16)\[([\d,]+)\]", hlo_text):
+        shapes[m.group(1)].add(m.group(2))
+    total = 0
+    for dims in shapes["f32"] & shapes["bf16"]:
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 > 100e6:
+            total += n * 4
+    return total
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["peak_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def _cost_dict(cost) -> dict:
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return {k: float(v) for k, v in dict(cost).items()
+            if isinstance(v, (int, float))}
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str, force: bool = False,
+             include_skipped: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    path = os.path.join(out_dir, mesh_name, f"{arch_id}__{shape_name}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "n_chips": int(n_chips)}
+    t0 = time.time()
+    try:
+        cell = build_cell(arch_id, shape_name, mesh)
+        rec["meta"] = {k: float(v) for k, v in cell.meta.items()}
+        if cell.skip_reason:
+            rec["skipped"] = cell.skip_reason
+            rec["extra_cell"] = True   # we run it anyway, marked non-required
+        with mesh:
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate,
+            )
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            print(f"[{mesh_name}] {arch_id} x {shape_name}: "
+                  f"memory_analysis: {mem}")
+            cost = _cost_dict(compiled.cost_analysis())
+            print(f"[{mesh_name}] {arch_id} x {shape_name}: cost_analysis "
+                  f"flops={cost.get('flops', 0):.3e} "
+                  f"bytes={cost.get('bytes accessed', 0):.3e}")
+            hlo_text = compiled.as_text()
+            coll = RL.collective_bytes(hlo_text)
+            emu = _bf16_emulation_bytes(hlo_text)
+
+        rec["memory"] = _mem_dict(mem)
+        rec["memory"]["bf16_emulation_f32_bytes"] = int(emu)
+        rec["memory"]["tpu_native_peak_estimate"] = max(
+            rec["memory"]["peak_bytes_per_device"] - emu, 0)
+        rec["cost"] = cost
+        rec["collectives"] = coll
+        rec["roofline"] = RL.roofline_terms(
+            cost, coll, n_chips, cell.meta.get("model_flops"))
+        rec["lower_s"] = round(t_lower, 2)
+        rec["compile_s"] = round(t_compile, 2)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    status = "OK" if rec.get("ok") else f"FAIL ({rec.get('error', '')[:120]})"
+    print(f"[{mesh_name}] {arch_id} x {shape_name}: {status} "
+          f"({rec['wall_s']}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    n_fail = 0
+    if args.all:
+        for mp in meshes:
+            for arch_id, shape_name in all_cells():
+                rec = run_cell(arch_id, shape_name, mp, args.out,
+                               force=args.force)
+                n_fail += 0 if rec.get("ok") or rec.get("skipped") else 1
+    else:
+        for mp in meshes:
+            rec = run_cell(args.arch, args.shape, mp, args.out,
+                           force=args.force)
+            n_fail += 0 if rec.get("ok") or rec.get("skipped") else 1
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

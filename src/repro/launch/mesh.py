@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (required so smoke tests see 1 CPU device while
+the dry-run process sees 512 virtual ones).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def engine_axes(mesh) -> tuple[str, ...]:
+    """The axes the streaming engine shards table capacity over."""
+    return tuple(a for a in mesh.axis_names if a != "model") + ("model",)

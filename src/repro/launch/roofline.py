@@ -1,0 +1,127 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_device / 197e12        (bf16 peak / chip)
+    memory     = HLO_bytes_per_device / 819e9         (HBM bw / chip)
+    collective = bytes_on_wire_per_device / 50e9      (ICI per link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (post-SPMD: per-device
+program).  Collective bytes are NOT in cost_analysis — we parse the
+optimized HLO text and sum per-op wire traffic with ring-algorithm
+factors (documented in ``_wire_bytes``):
+
+    all-reduce          2 x result bytes x (n-1)/n
+    all-gather          1 x result bytes x (n-1)/n
+    reduce-scatter      1 x operand bytes x (n-1)/n
+    all-to-all          1 x result bytes x (n-1)/n
+    collective-permute  1 x result bytes
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?P<rtype>\(?[\w\[\],{}\s/]*?\)?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[G,S]<=[N]: G groups of size S
+        return int(m.group(2))
+    return 2  # conservative default
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective op kind, from optimized HLO."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "n_ops": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        rbytes = _type_bytes(m.group("rtype"))
+        n = max(_group_size(line), 1)
+        ring = (n - 1) / n if n > 1 else 0.0
+        if op == "all-reduce":
+            wire = 2 * rbytes * ring
+        elif op == "all-gather":
+            wire = rbytes * ring
+        elif op == "reduce-scatter":
+            # result is the scattered piece; operand ~= result * n
+            wire = rbytes * (n - 1)
+        elif op == "all-to-all":
+            wire = rbytes * ring
+        else:  # collective-permute
+            wire = rbytes
+        out[op] += wire
+        out["n_ops"] += 1
+    out["total"] = sum(v for k, v in out.items()
+                       if k not in ("n_ops", "total"))
+    return out
+
+
+def roofline_terms(cost: dict, coll: dict, n_chips: int,
+                   model_flops: float | None = None) -> dict:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll["total"] / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    out = {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "bound_s": bound,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "wire_bytes_per_device": coll["total"],
+        "n_chips": n_chips,
+    }
+    if model_flops:
+        hlo_total = flops_dev * n_chips
+        out["model_flops"] = float(model_flops)
+        out["useful_flops_ratio"] = (
+            float(model_flops) / hlo_total if hlo_total else 0.0)
+        # roofline fraction: useful work at peak vs. the binding term
+        out["roofline_fraction"] = (
+            (model_flops / n_chips / PEAK_FLOPS) / bound if bound else 0.0)
+    return out

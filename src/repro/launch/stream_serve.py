@@ -1,0 +1,62 @@
+"""Continuous-query serving driver for the streaming engine.
+
+The production loop: register continuous queries (compiled once), then
+ingest edges tick by tick with adaptive batch coalescing (straggler /
+backpressure control) and periodic state checkpoints (fault tolerance:
+a restarted server restores its expansion lists and misses nothing that
+is still inside the window).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.core.engine import build_tick
+from repro.core.plan import ExecutionPlan, compile_plan
+from repro.core.state import init_state, make_batch
+from repro.runtime.straggler import TickCoalescer
+from repro.stream.generator import to_batches
+
+
+class StreamServer:
+    def __init__(self, plan: ExecutionPlan, ckpt_dir: str | None = None,
+                 extract_matches: bool = True):
+        self.plan = plan
+        self.tick = jax.jit(build_tick(plan, extract_matches=extract_matches))
+        self.state = init_state(plan)
+        self.coalescer = TickCoalescer(batch=64)
+        self.ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+        self.ticks = 0
+        if ckpt_dir and (last := latest_step(ckpt_dir)) is not None:
+            self.state = restore_checkpoint(ckpt_dir, last, self.state)
+            self.ticks = last
+
+    def ingest(self, edges: list, on_match=None, ckpt_every: int = 0):
+        """Feed DataEdges; returns total new matches reported."""
+        total = 0
+        i = 0
+        batch_size = self.coalescer.batch
+        while i < len(edges):
+            chunk = edges[i:i + batch_size]
+            i += len(chunk)
+            b = to_batches(chunk, len(chunk))[0]
+            t0 = time.perf_counter()
+            self.state, res = self.tick(self.state, make_batch(**b))
+            n_new = int(res.n_new_matches)
+            total += n_new
+            if n_new and on_match is not None:
+                valid = np.asarray(res.match_valid)
+                on_match(np.asarray(res.match_bindings)[valid],
+                         np.asarray(res.match_ets)[valid])
+            self.ticks += 1
+            lat_ms = (time.perf_counter() - t0) * 1e3
+            batch_size = self.coalescer.record(lat_ms, len(edges) - i)
+            if self.ckpt and ckpt_every and self.ticks % ckpt_every == 0:
+                self.ckpt.save(self.ticks, self.state)
+        if self.ckpt:
+            self.ckpt.wait()
+        return total

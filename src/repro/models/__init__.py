@@ -1,0 +1,11 @@
+"""Assigned-architecture model zoo.
+
+transformer  Dense + MoE decoder LMs (GQA, RoPE, qk-norm, SwiGLU),
+             scan-over-layers, chunked-softmax attention, KV-cache decode.
+gnn          GAT / GIN / PNA / NequIP over segment-op message passing.
+recsys       Wide&Deep with row-sharded EmbeddingBag + retrieval scoring.
+
+Every model exposes: ``init(rng, cfg)``, ``loss_fn`` / ``forward``,
+``param_specs(cfg, axes)`` (PartitionSpecs for pjit) and
+``input_specs(cfg, shape)`` (ShapeDtypeStructs for the dry-run).
+"""

@@ -1,0 +1,165 @@
+"""Attention: GQA with RoPE/qk-norm, chunked-softmax prefill/train path and
+KV-cache decode with sequence-sharded caches.
+
+Design notes (TPU):
+* Train/prefill uses an online-softmax scan over KV chunks so the [S, S]
+  score matrix never materializes for long sequences (32k prefill).
+* Decode computes one query position against a [S_max] cache; with the
+  cache's sequence axis sharded over the 'model' mesh axis, GSPMD lowers
+  the softmax reduction into partial-softmax + cross-shard combine —
+  exactly flash-decoding's split-KV scheme, derived from shardings
+  rather than hand-written collectives.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, constrain, rms_norm, rope_freqs
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, h, n_rep, d)
+    ).reshape(b, s, h * n_rep, d)
+
+
+def gqa_attention(
+    q,             # [B, S, Hq, hd]
+    k,             # [B, S, Hkv, hd]
+    v,             # [B, S, Hkv, hd]
+    *,
+    causal: bool = True,
+    chunk_size: int = 1024,
+    window: int | None = None,   # sliding-window attention (beyond-paper opt)
+    axes=None,
+):
+    """Online-softmax chunked attention; exact, O(S·chunk) memory.
+
+    With ``axes``, q/k/v (and thus the score blocks) are head-sharded
+    over tp — Megatron-style head parallelism.  The [B,H,S,chunk] fp32
+    score block is the largest attention temporary; head sharding cuts
+    it by the TP degree (GSPMD pads 56->64 heads on a 16-way axis).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    q = constrain(q, axes, "dp", None, "tp", None)
+    k = constrain(k, axes, "dp", None, "tp", None)
+    v = constrain(v, axes, "dp", None, "tp", None)
+    scale = hd ** -0.5
+    q = q * scale
+
+    n_chunks = max(1, s // chunk_size)
+    cs = s // n_chunks
+    kc = k.reshape(b, n_chunks, cs, hq, hd)
+    vc = v.reshape(b, n_chunks, cs, hq, hd)
+    qpos = jnp.arange(s)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, c = xs
+        kpos = c * cs + jnp.arange(cs)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                        preferred_element_type=jnp.float32)
+        mask = jnp.ones((s, cs), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        sc = jnp.where(mask[None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, s), jnp.float32)
+    a0 = jnp.zeros((b, hq, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.swapaxes(1, 2).astype(q.dtype)  # [B, S, Hq, hd]
+
+
+def decode_attention(
+    q,          # [B, 1, Hq, hd]
+    k_cache,    # [B, S_max, Hkv, hd]
+    v_cache,    # [B, S_max, Hkv, hd]
+    length,     # int32 [B] — valid cache length per sequence
+):
+    """Single-position attention over the full cache (GSPMD splits the
+    seq-axis reduction across 'model' shards = flash-decoding)."""
+    b, smax, hkv, hd = k_cache.shape
+    hq = q.shape[2]
+    k_cache = _repeat_kv(k_cache, hq // hkv)
+    v_cache = _repeat_kv(v_cache, hq // hkv)
+    scale = hd ** -0.5
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q * scale, k_cache,
+                    preferred_element_type=jnp.float32)
+    pos = jnp.arange(smax)
+    mask = pos[None, :] < length[:, None]            # [B, S]
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_block(
+    x,                  # [B, S, d]
+    p,                  # params dict: wq, wk, wv, wo (+ qnorm/knorm scales)
+    cfg,
+    positions=None,
+    kv_cache=None,      # (k, v, length) for decode
+    axes=None,
+):
+    """Full attention block shared by train/prefill/decode paths.
+
+    Projection weights are stored with heads FLATTENED into the feature
+    dim ([d, H*hd]) so the TP axis shards the 128-multiple flat dim —
+    head counts like 56/40 don't divide a 16-way mesh axis, flat feature
+    dims always do (argument shardings must divide exactly; GSPMD pads
+    only internal constraints).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if kv_cache is not None:
+        kc, vc, length = kv_cache
+        # write the new K/V at position `length` (decode: s == 1)
+        idx = length[:, None] + jnp.arange(s)[None, :]
+        bidx = jnp.arange(b)[:, None]
+        kc = kc.at[bidx, idx].set(k.astype(kc.dtype))
+        vc = vc.at[bidx, idx].set(v.astype(vc.dtype))
+        out = decode_attention(q, kc, vc, length + s)
+        new_cache = (kc, vc, length + s)
+    else:
+        out = gqa_attention(
+            q, k, v, causal=True, chunk_size=cfg.attn_chunk,
+            window=cfg.attn_window, axes=axes)
+        new_cache = (k, v, None)   # post-RoPE K/V for prefill cache capture
+
+    y = out.reshape(b, s, hq * hd) @ p["wo"]
+    return y, new_cache

@@ -1,0 +1,9 @@
+"""GNN zoo: message passing over edge lists via segment ops.
+
+JAX has no sparse-matrix message passing beyond BCOO; the substrate here
+is the edge-index formulation — ``gather(src) -> transform ->
+segment_reduce(dst)`` — with the segment_reduce backend switchable
+between XLA scatter and the Pallas one-hot-MXU kernel.
+"""
+
+from repro.models.gnn.message import gather_scatter, segment_softmax

@@ -1,0 +1,54 @@
+"""Message-passing primitives over (edge_src, edge_dst) index arrays.
+
+Edges with src or dst < 0 are padding and contribute nothing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce import ops as sr
+
+
+def gather_scatter(x, edge_src, edge_dst, n_nodes: int,
+                   transform=None, reduce: str = "sum",
+                   backend: str = "xla"):
+    """out[dst] = reduce over edges of transform(x[src])."""
+    src_ok = edge_src >= 0
+    msg = jnp.take(x, jnp.maximum(edge_src, 0), axis=0)
+    msg = jnp.where(src_ok[:, None], msg, 0)
+    if transform is not None:
+        msg = transform(msg)
+    dst = jnp.where(src_ok & (edge_dst >= 0), edge_dst, -1)
+    if reduce == "sum":
+        return sr.segment_sum(dst, msg, n_nodes, backend)
+    if reduce == "mean":
+        return sr.segment_mean(dst, msg, n_nodes, backend)
+    if reduce in ("max", "min"):
+        seg = jnp.where(dst < 0, n_nodes, dst)
+        fn = jax.ops.segment_max if reduce == "max" else jax.ops.segment_min
+        fill = -jnp.inf if reduce == "max" else jnp.inf
+        out = fn(msg, seg, num_segments=n_nodes + 1)[:n_nodes]
+        return jnp.where(jnp.isfinite(out), out, 0)
+    raise ValueError(reduce)
+
+
+def segment_softmax(scores, seg, n_segments: int):
+    """Numerically-stable softmax of ``scores`` grouped by ``seg``.
+
+    scores [E, H]; seg int32 [E] (-1 = padding -> weight 0).
+    """
+    seg_safe = jnp.where(seg < 0, n_segments, seg)
+    mx = jax.ops.segment_max(scores, seg_safe, num_segments=n_segments + 1)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0)
+    ex = jnp.exp(scores - mx[seg_safe])
+    ex = jnp.where((seg >= 0)[:, None], ex, 0)
+    den = jax.ops.segment_sum(ex, seg_safe, num_segments=n_segments + 1)
+    return ex / jnp.maximum(den[seg_safe], 1e-16)
+
+
+def degrees(edge_dst, n_nodes: int):
+    ones = jnp.ones((edge_dst.shape[0], 1), jnp.float32)
+    dst = jnp.where(edge_dst >= 0, edge_dst, n_nodes)
+    return jax.ops.segment_sum(ones, dst, num_segments=n_nodes + 1)[:n_nodes, 0]

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN: top-k routing with GROUPED static-shape
+dispatch (capacity model), expert-parallel over the 'model' mesh axis.
+
+Dispatch strategy (GShard-style, all static shapes):
+  1. tokens reshape to [G, T/G, d] with G = the data-parallel degree, so
+     every group is LOCAL to one dp shard — routing, sort-by-expert,
+     rank-within-expert and the capacity scatter never cross shards;
+  2. per-group expert buffers [G, E, C_g, d]; the expert einsum against
+     tp-sharded expert weights is the single point where GSPMD inserts
+     the dp<->tp all-to-all (the canonical MoE collective);
+  3. weighted per-group segment-sum back to token order.
+
+A single flat (ungrouped) sort is simpler but makes the dispatch gather
+global: GSPMD replicates the full token buffer per device (measured
++100 GB/device at grok-prefill scale — EXPERIMENTS.md §Perf, MoE
+iteration).
+
+Aux losses: Switch load-balance + router z-loss (per-group averages).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import constrain
+
+
+def _dispatch_group(xl, p, cfg, cap: int):
+    """Route one token group. xl: [Tg, d] -> (out [Tg, d], lb, z)."""
+    tg, d = xl.shape
+    e, k = cfg.n_experts, cfg.moe_topk
+
+    logits = jnp.einsum("td,de->te", xl, p["wg"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, k)              # [Tg, k]
+    if cfg.moe_renorm:
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(-1)                          # [Tg*k]
+    flat_t = jnp.repeat(jnp.arange(tg), k)
+    flat_w = topw.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(e))
+    pos = jnp.arange(tg * k) - starts[se]
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)    # sentinel = dropped
+
+    xe = jnp.zeros((e * cap + 1, d), xl.dtype).at[slot].set(
+        xl[st], mode="drop")
+    xe = xe[:-1].reshape(e, cap, d)
+
+    # aux-loss statistics
+    me = gates.mean(axis=0)
+    ce = jax.ops.segment_sum(
+        jnp.ones_like(flat_e, jnp.float32), flat_e,
+        num_segments=e) / (tg * k)
+    lb = e * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return xe, (slot, st, sw), lb, z
+
+
+def _combine_group(y, route, tg: int, cap: int, cfg):
+    slot, st, sw = route
+    e = cfg.n_experts
+    d = y.shape[-1]
+    y_flat = jnp.concatenate(
+        [y.reshape(e * cap, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    contrib = y_flat[slot] * sw[:, None].astype(y.dtype)
+    return jax.ops.segment_sum(contrib, st, num_segments=tg)
+
+
+def moe_ffn(x, p, cfg, axes=None):
+    """x: [T, d] tokens; returns ([T, d], aux_loss scalar)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_topk
+    g = math.gcd(t, axes.dp_size) if axes is not None else 1
+    tg = t // g
+    cap = int(cfg.capacity_factor * k * tg / e)
+    cap = max(4, min(cap, tg * k))
+
+    xg = x.reshape(g, tg, d)
+    xg = constrain(xg, axes, "dp", None, None)
+
+    xe, route, lb, z = jax.vmap(
+        lambda xl: _dispatch_group(xl, p, cfg, cap))(xg)
+    # xe: [G, E, C, d] — G over dp; expert einsum below is where the
+    # dp<->tp all-to-all happens (expert weights live on tp shards).
+    expert_tp = getattr(cfg, "expert_shard", "expert") == "expert"
+    e_spec = ("dp", "tp" if expert_tp else None, None, None)
+    xe = constrain(xe, axes, *e_spec)
+
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w1"])
+    if "w3" in p:
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["w3"])
+    else:
+        h = jax.nn.silu(h)
+    h = constrain(h, axes,
+                  "dp", "tp" if expert_tp else None, None,
+                  None if expert_tp else "tp")
+    y = jnp.einsum("gecf,efd->gecd", h, p["w2"])       # [G, E, C, d]
+    y = constrain(y, axes, *e_spec)
+
+    out = jax.vmap(
+        lambda yl, rt: _combine_group(yl, rt, tg, cap, cfg))(y, route)
+    out = constrain(out, axes, "dp", None, None).reshape(t, d)
+    aux = cfg.moe_lb_coef * lb.mean() + cfg.moe_z_coef * z.mean()
+    return out.astype(x.dtype), aux

@@ -1,0 +1,1 @@
+"""RecSys: Wide&Deep with sharded embedding tables + retrieval scoring."""

@@ -1,0 +1,316 @@
+"""Decoder-only LM family: dense and MoE, GQA + RoPE (+ qk-norm),
+SwiGLU, scan-over-layers with configurable remat.
+
+Covers the five assigned LM architectures (deepseek-coder-33b, qwen3-14b,
+internlm2-20b, arctic-480b, grok-1-314b) through one config dataclass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import attention_block
+from repro.models.common import constrain, dense_init, rms_norm
+from repro.models.moe import moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 512
+    vocab: int = 1024
+    # MoE
+    moe: bool = False
+    n_experts: int = 8
+    moe_topk: int = 2
+    moe_renorm: bool = True
+    capacity_factor: float = 1.25
+    dense_residual: bool = False     # Arctic: dense FFN in parallel with MoE
+    residual_d_ff: int = 0           # width of that dense branch
+    moe_lb_coef: float = 0.01
+    moe_z_coef: float = 1e-3
+    expert_shard: str = "expert"     # 'expert' | 'ffn' (TP axis placement)
+    # attention
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    attn_chunk: int = 1024
+    attn_window: int | None = None   # sliding-window attention
+    # numerics / memory
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: str = "full"              # 'full' | 'none'
+    z_loss: float = 1e-4
+    tie_embeddings: bool = False
+
+    @property
+    def kv_cache_shape(self):
+        return (self.n_layers, None, None, self.n_kv_heads, self.head_dim)
+
+
+# --------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------- #
+def _init_layer(rng, cfg: LMConfig):
+    ks = jax.random.split(rng, 12)
+    d, hq, hkv, hd, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.head_dim, cfg.d_ff)
+    pd = cfg.param_dtype
+    p = {
+        "ln1": jnp.ones((d,), pd),
+        "ln2": jnp.ones((d,), pd),
+        "attn": {
+            "wq": dense_init(ks[0], (d, hq * hd), 0, pd),
+            "wk": dense_init(ks[1], (d, hkv * hd), 0, pd),
+            "wv": dense_init(ks[2], (d, hkv * hd), 0, pd),
+            "wo": dense_init(ks[3], (hq * hd, d), 0, pd)
+            / (2 * cfg.n_layers) ** 0.5,
+        },
+    }
+    if cfg.qk_norm:
+        p["attn"]["q_norm"] = jnp.ones((hd,), pd)
+        p["attn"]["k_norm"] = jnp.ones((hd,), pd)
+    if cfg.moe:
+        p["moe"] = {
+            "wg": dense_init(ks[4], (d, cfg.n_experts), 0, pd),
+            "w1": dense_init(ks[5], (cfg.n_experts, d, f), 1, pd),
+            "w3": dense_init(ks[6], (cfg.n_experts, d, f), 1, pd),
+            "w2": dense_init(ks[7], (cfg.n_experts, f, d), 1, pd),
+        }
+        if cfg.dense_residual:
+            rf = cfg.residual_d_ff or f
+            p["ffn"] = {
+                "w1": dense_init(ks[8], (d, rf), 0, pd),
+                "w3": dense_init(ks[9], (d, rf), 0, pd),
+                "w2": dense_init(ks[10], (rf, d), 0, pd),
+            }
+    else:
+        p["ffn"] = {
+            "w1": dense_init(ks[8], (d, f), 0, pd),
+            "w3": dense_init(ks[9], (d, f), 0, pd),
+            "w2": dense_init(ks[10], (f, d), 0, pd),
+        }
+    return p
+
+
+def init(rng, cfg: LMConfig):
+    k_emb, k_head, k_layers = jax.random.split(rng, 3)
+    layers = jax.vmap(lambda r: _init_layer(r, cfg))(
+        jax.random.split(k_layers, cfg.n_layers))
+    params = {
+        "embed": dense_init(k_emb, (cfg.vocab, cfg.d_model), 1,
+                            cfg.param_dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            k_head, (cfg.d_model, cfg.vocab), 0, cfg.param_dtype)
+    return params
+
+
+# --------------------------------------------------------------------- #
+# Forward
+# --------------------------------------------------------------------- #
+def _dense_ffn(x, p):
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+def _layer(x, lp, cfg: LMConfig, kv_cache=None, positions=None, axes=None):
+    h, new_cache = attention_block(
+        rms_norm(x, lp["ln1"]), lp["attn"], cfg,
+        positions=positions, kv_cache=kv_cache, axes=axes)
+    x = x + h
+    xin = rms_norm(x, lp["ln2"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        b, s, d = xin.shape
+        y, aux = moe_ffn(xin.reshape(b * s, d), lp["moe"], cfg, axes=axes)
+        y = y.reshape(b, s, d)
+        if cfg.dense_residual:
+            y = y + _dense_ffn(xin, lp["ffn"])
+    else:
+        y = _dense_ffn(xin, lp["ffn"])
+    return x + y, aux, new_cache
+
+
+def forward(params, tokens, cfg: LMConfig, axes=None):
+    """tokens [B, S] -> logits [B, S, V].
+
+    ``axes`` (MeshAxes) inserts activation sharding constraints: batch
+    over dp at every layer boundary, vocab over tp at the LM head.
+    Without them GSPMD loses the dp sharding across the grad-accumulation
+    reshape + layer scan and replicates activations (measured: 79 GB/dev
+    -> fits after constraining; see EXPERIMENTS.md §Perf iteration 1).
+    """
+    x = jnp.take(params["embed"].astype(cfg.dtype), tokens, axis=0)
+    x = constrain(x, axes, "dp", None, None)
+
+    def body(x, lp):
+        y, aux, _ = _layer(x, jax.tree.map(lambda a: a.astype(cfg.dtype), lp),
+                           cfg, axes=axes)
+        y = constrain(y, axes, "dp", None, None)
+        return y, (aux,)
+
+    layer_fn = body
+    if cfg.remat == "full":
+        layer_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (auxs,) = jax.lax.scan(layer_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype))
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain(logits, axes, "dp", None, "tp")
+    return logits, auxs.sum()
+
+
+def loss_fn(params, tokens, cfg: LMConfig, axes=None):
+    """Next-token cross entropy (+ router aux + z-loss)."""
+    logits, aux = forward(params, tokens, cfg, axes)
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = (lse - ll).mean()
+    zl = cfg.z_loss * jnp.mean(lse ** 2)
+    return ce + zl + aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------- #
+# Decode path
+# --------------------------------------------------------------------- #
+def serve_step(params, tokens, cache, cfg: LMConfig):
+    """One decode step.
+
+    tokens [B, 1]; cache = (k [L,B,S,Hkv,hd], v [...], length [B]).
+    Returns (logits [B, V], new cache).
+    """
+    kc, vc, length = cache
+    x = jnp.take(params["embed"].astype(cfg.dtype), tokens, axis=0)
+    positions = length[:, None]
+
+    def body(x, xs):
+        lp, kl, vl = xs
+        lp = jax.tree.map(lambda a: a.astype(cfg.dtype), lp)
+        y, _, new_cache = _layer(
+            x, lp, cfg, kv_cache=(kl, vl, length), positions=positions)
+        nk, nv, _ = new_cache
+        return y, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kc, vc))
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype))
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], head)[:, 0]
+    return logits, (nk, nv, length + tokens.shape[1])
+
+
+def prefill(params, tokens, cfg: LMConfig, axes=None):
+    """Serving prefill: one forward pass that captures the post-RoPE KV
+    cache for every layer and returns only the last-position logits (the
+    realistic prompt-processing step the dry-run lowers for the
+    ``prefill_*`` shapes).
+
+    Returns (logits [B, V], k [L,B,S,Hkv,hd], v [L,B,S,Hkv,hd]).
+    """
+    x = jnp.take(params["embed"].astype(cfg.dtype), tokens, axis=0)
+    x = constrain(x, axes, "dp", None, None)
+
+    def body(x, lp):
+        lp = jax.tree.map(lambda a: a.astype(cfg.dtype), lp)
+        h, (k, v, _) = attention_block(rms_norm(x, lp["ln1"]), lp["attn"],
+                                       cfg, axes=axes)
+        x = x + h
+        xin = rms_norm(x, lp["ln2"])
+        if cfg.moe:
+            b, s, d = xin.shape
+            y, _ = moe_ffn(xin.reshape(b * s, d), lp["moe"], cfg, axes=axes)
+            y = y.reshape(b, s, d)
+            if cfg.dense_residual:
+                y = y + _dense_ffn(xin, lp["ffn"])
+        else:
+            y = _dense_ffn(xin, lp["ffn"])
+        x = constrain(x + y, axes, "dp", None, None)
+        return x, (k, v)
+
+    x, (k_all, v_all) = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x[:, -1:], params["final_norm"].astype(cfg.dtype))
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, k_all, v_all
+
+
+# --------------------------------------------------------------------- #
+# Sharding specs
+# --------------------------------------------------------------------- #
+def param_specs(cfg: LMConfig, axes) -> Any:
+    """PartitionSpec pytree matching init()'s structure.
+
+    fsdp = axes.fsdp (ZeRO-3 over data axes), tp = axes.tp.
+    Layer-stacked params get a leading None for the scan dim.
+    """
+    fsdp, tp = axes.fsdp, axes.tp
+
+    def L(*s):  # layer-stacked
+        return P(None, *s)
+
+    attn = {
+        "wq": L(fsdp, tp),           # heads flattened: [d, Hq*hd]
+        "wk": L(fsdp, tp),           # [d, Hkv*hd] (1024 divides fine)
+        "wv": L(fsdp, tp),
+        "wo": L(tp, fsdp),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = L(None)
+        attn["k_norm"] = L(None)
+    layer = {"ln1": L(None), "ln2": L(None), "attn": attn}
+    dense_ffn = {"w1": L(fsdp, tp), "w3": L(fsdp, tp), "w2": L(tp, fsdp)}
+    if cfg.moe:
+        if cfg.expert_shard == "expert":
+            layer["moe"] = {
+                "wg": L(fsdp, None),
+                "w1": L(tp, fsdp, None),
+                "w3": L(tp, fsdp, None),
+                "w2": L(tp, None, fsdp),
+            }
+        else:  # shard the ffn dim (few-expert models: grok)
+            layer["moe"] = {
+                "wg": L(fsdp, None),
+                "w1": L(None, fsdp, tp),
+                "w3": L(None, fsdp, tp),
+                "w2": L(None, tp, fsdp),
+            }
+        if cfg.dense_residual:
+            layer["ffn"] = dense_ffn
+    else:
+        layer["ffn"] = dense_ffn
+    specs = {
+        # vocab replicated over tp: keeps the token gather local (a
+        # vocab-sharded gather triggers involuntary full remat in SPMD);
+        # the d axis is FSDP-sharded so the table still scales.
+        "embed": P(None, fsdp),
+        "final_norm": P(None),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(fsdp, tp)
+    return specs
+
+
+def cache_specs(cfg: LMConfig, axes):
+    """KV cache (k, v, length): batch over dp, seq over tp (flash-decode)."""
+    dp, tp = axes.dp, axes.tp
+    kv = P(None, dp, tp, None, None)
+    return (kv, kv, P(dp))

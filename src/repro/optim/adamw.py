@@ -1,0 +1,163 @@
+"""AdamW with memory-scalable state variants.
+
+State modes (per-arch config; the 480B-MoE single-pod budget needs them):
+  * ``fp32``     — standard m, v in fp32 (12 B/param with fp32 master).
+  * ``factored`` — Adafactor-style factored second moment for tensors
+                   with >= 2 dims (row+col statistics), fp32 first
+                   moment (≈8 B/param).
+  * ``int8``     — first moment quantized to int8 with per-tensor scale,
+                   factored second moment (≈5 B/param).
+
+All states inherit the parameter's PartitionSpec (ZeRO-style: state is
+sharded exactly like its parameter, so the optimizer update is fully
+local — no optimizer collectives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    state_mode: str = "fp32"      # fp32 | factored | int8
+
+
+def _factored_shape(shape):
+    """Factor the last two dims; leading dims (layer stack) kept."""
+    return shape[:-1], shape[:-2] + shape[-1:]
+
+
+def _use_factored(x) -> bool:
+    return x.ndim >= 2 and x.shape[-1] >= 8 and x.shape[-2] >= 8
+
+
+def _stacked(x) -> bool:
+    """Layer-stacked leaf (leading scan dim) -> chunked update + per-layer
+    quantization scales."""
+    return x.ndim >= 3 and x.shape[0] > 1
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def init_leaf(x):
+        st = {}
+        if cfg.state_mode in ("factored", "int8") and _use_factored(x):
+            r, c = _factored_shape(x.shape)
+            st["vr"] = jnp.zeros(r, jnp.float32)
+            st["vc"] = jnp.zeros(c, jnp.float32)
+        else:
+            st["v"] = jnp.zeros(x.shape, jnp.float32)
+        if cfg.state_mode == "int8":
+            st["m_q"] = jnp.zeros(x.shape, jnp.int8)
+            st["m_scale"] = jnp.zeros(
+                (x.shape[0],) if _stacked(x) else (), jnp.float32)
+        else:
+            st["m"] = jnp.zeros(x.shape, jnp.float32)
+        return st
+
+    return {
+        "leaves": jax.tree.map(init_leaf, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state, params, lr, cfg: AdamWConfig):
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, st, p):
+        g = g.astype(jnp.float32) * scale
+        out = {}
+        # second moment
+        if "vr" in st:
+            g2 = jnp.square(g) + 1e-30
+            vr = b2 * st["vr"] + (1 - b2) * g2.mean(axis=-1)
+            vc = b2 * st["vc"] + (1 - b2) * g2.mean(axis=-2)
+            out["vr"], out["vc"] = vr, vc
+            # rank-1 reconstruction (Adafactor): vr ⊗ vc / mean(vr)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            v_hat = (vr[..., :, None] * vc[..., None, :]) / denom[..., None]
+        else:
+            v = b2 * st["v"] + (1 - b2) * jnp.square(g)
+            out["v"] = v
+            v_hat = v
+        # first moment
+        if "m_q" in st:
+            m_prev = st["m_q"].astype(jnp.float32) * st["m_scale"]
+            m = b1 * m_prev + (1 - b1) * g
+            s = jnp.maximum(jnp.max(jnp.abs(m)), 1e-12) / 127.0
+            out["m_q"] = jnp.clip(jnp.round(m / s), -127, 127).astype(jnp.int8)
+            out["m_scale"] = s
+        else:
+            m = b1 * st["m"] + (1 - b1) * g
+            out["m"] = m
+        step = (m / c1) / (jnp.sqrt(v_hat / c2) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (step + decay)
+        return new_p.astype(p.dtype), out
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["leaves"])
+    new_p, new_s = [], []
+    for g, st, p in zip(flat_g, flat_s, flat_p):
+        if _stacked(p):
+            # layer-stacked leaf: chunk the elementwise update over the
+            # stack dim so only one layer's fp32 temporaries (g, m,
+            # v_hat, step) are live at a time.  At 480B-MoE scale the
+            # unchunked update holds ~5 fp32 copies of the largest leaf
+            # (= +10 GB/device; EXPERIMENTS.md §Perf, optimizer iter).
+            np_, ns_ = jax.lax.map(
+                lambda args: upd(*args), (g, st, p))
+        else:
+            np_, ns_ = upd(g, st, p)
+        new_p.append(np_)
+        new_s.append(ns_)
+    return (
+        jax.tree.unflatten(tdef, new_p),
+        {"leaves": jax.tree.unflatten(tdef, new_s), "count": count},
+        {"grad_norm": gnorm},
+    )
+
+
+def state_specs(param_specs_tree, params, cfg: AdamWConfig):
+    """Optimizer-state PartitionSpecs mirroring each parameter's spec."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(spec, x):
+        st = {}
+        if cfg.state_mode in ("factored", "int8") and _use_factored(x):
+            st["vr"] = P(*spec[:-1]) if spec else P()
+            st["vc"] = P(*(spec[:-2] + spec[-1:])) if spec else P()
+        else:
+            st["v"] = spec
+        if cfg.state_mode == "int8":
+            st["m_q"] = spec
+            st["m_scale"] = P(None) if _stacked(x) else P()
+        else:
+            st["m"] = spec
+        return st
+
+    return {
+        "leaves": jax.tree.map(leaf, param_specs_tree, params),
+        "count": P(),
+    }

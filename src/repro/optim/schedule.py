@@ -1,0 +1,15 @@
+"""LR schedules."""
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(peak_lr: float, warmup: int, total: int,
+                       floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0, 1)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

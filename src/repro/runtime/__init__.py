@@ -1,0 +1,4 @@
+"""Runtime layer: fault tolerance, elastic scaling, straggler mitigation."""
+
+from repro.runtime.fault import FaultTolerantLoop, SimulatedFailure
+from repro.runtime.straggler import TickCoalescer

@@ -1,0 +1,42 @@
+"""Elastic scaling: re-fit a running job onto a different mesh.
+
+Mechanics: all state lives in pytrees with explicit PartitionSpec trees;
+scaling up/down = checkpoint -> rebuild mesh -> restore with the new
+NamedShardings (checkpoint.reshard does the placement).  The specs are
+mesh-shape-agnostic (they name logical axes), so the same spec tree works
+for 16x16, 2x16x16, or a degraded 15x16 donut — GSPMD handles uneven
+tiling by padding.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint import reshard
+
+
+def scale_to_mesh(state, old_mesh, new_mesh, specs):
+    """Move ``state`` (pytree on old_mesh) onto new_mesh under ``specs``."""
+    del old_mesh  # the host round-trip is mesh-agnostic
+    return reshard(state, new_mesh, specs)
+
+
+def degraded_mesh(devices, shape, axis_names, drop: int = 0):
+    """Build a mesh from the surviving device list (node-failure path):
+    drops ``drop`` devices and re-folds the rest into the largest
+    fitting mesh of the same axis structure."""
+    import numpy as np
+
+    devs = list(devices)[: len(devices) - drop]
+    total = len(devs)
+    # shrink the first axis to fit
+    trailing = 1
+    for s in shape[1:]:
+        trailing *= s
+    first = total // trailing
+    if first < 1:
+        raise ValueError("not enough devices for the requested mesh shape")
+    new_shape = (first,) + tuple(shape[1:])
+    used = first * trailing
+    arr = np.array(devs[:used]).reshape(new_shape)
+    return jax.sharding.Mesh(arr, axis_names)

@@ -1,0 +1,74 @@
+"""Fault-tolerant training/streaming loop.
+
+The loop owns: periodic async checkpoints, restart-from-latest recovery,
+and a bounded retry budget.  Failures surface as exceptions from the
+step function (on a real cluster: device halo errors / missing-worker
+errors surfaced by the runtime; here: ``SimulatedFailure`` injected by
+tests).  Recovery = restore latest checkpoint and replay — steps are
+deterministic functions of (state, step_index), so the recovered run is
+bitwise-identical to an uninterrupted one (tested).
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import Callable
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+
+log = logging.getLogger(__name__)
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class FaultTolerantLoop:
+    def __init__(
+        self,
+        ckpt_dir: str,
+        step_fn: Callable,            # (state, step_idx) -> state
+        make_init_state: Callable,    # () -> state
+        ckpt_every: int = 50,
+        max_restarts: int = 5,
+        mesh=None,
+        specs=None,
+    ):
+        self.ckpt_dir = ckpt_dir
+        self.step_fn = step_fn
+        self.make_init_state = make_init_state
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.mesh = mesh
+        self.specs = specs
+        self.ckpt = AsyncCheckpointer(ckpt_dir)
+        self.restarts = 0
+
+    def _resume(self):
+        last = latest_step(self.ckpt_dir)
+        state = self.make_init_state()
+        if last is None:
+            return state, 0
+        state = restore_checkpoint(
+            self.ckpt_dir, last, state, self.mesh, self.specs)
+        log.info("restored checkpoint at step %d", last)
+        return state, last
+
+    def run(self, n_steps: int):
+        while True:
+            state, start = self._resume()
+            try:
+                for i in range(start, n_steps):
+                    state = self.step_fn(state, i)
+                    done = i + 1
+                    if done % self.ckpt_every == 0 or done == n_steps:
+                        self.ckpt.save(done, state)
+                self.ckpt.wait()
+                return state
+            except SimulatedFailure as e:  # pragma: no cover - loop logic
+                self.ckpt.wait()
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise RuntimeError("restart budget exhausted") from e
+                log.warning("failure at restart=%d: %s — recovering",
+                            self.restarts, e)

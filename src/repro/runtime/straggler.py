@@ -1,0 +1,37 @@
+"""Straggler mitigation for the streaming engine: adaptive tick coalescing.
+
+On a pod, the tick latency is (join compute + delta all-gathers); a slow
+shard (straggler) delays the barrier.  The paper's single-node answer is
+more threads; the distributed answer is *backpressure-aware batching*:
+if arrival rate exceeds tick throughput (queue depth grows), coalesce
+more edges per tick — per-edge cost falls roughly linearly in batch
+size until table-join compute dominates (see benchmarks/bench_concurrency).
+
+``TickCoalescer`` is a tiny AIMD controller over the tick batch size,
+mirroring how production stream processors (Flink/Dataflow) adapt bundle
+sizes.  Host-side logic: deterministic given its input trace, unit-tested.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class TickCoalescer:
+    min_batch: int = 32
+    max_batch: int = 4096
+    target_latency_ms: float = 50.0
+    batch: int = 256
+    _ema_latency: float = 0.0
+
+    def record(self, tick_latency_ms: float, queue_depth: int) -> int:
+        """Report the last tick; returns the batch size for the next one."""
+        a = 0.3
+        self._ema_latency = (1 - a) * self._ema_latency + a * tick_latency_ms
+        if queue_depth > 2 * self.batch and \
+                self._ema_latency < self.target_latency_ms:
+            self.batch = min(self.max_batch, self.batch * 2)   # MI
+        elif self._ema_latency > self.target_latency_ms:
+            self.batch = max(self.min_batch, int(self.batch * 0.8))  # AD
+        return self.batch

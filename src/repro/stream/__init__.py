@@ -1,0 +1,8 @@
+"""Stream substrate: synthetic edge-stream generators and windowing."""
+
+from repro.stream.generator import (
+    StreamConfig,
+    synth_traffic_stream,
+    synth_social_stream,
+    random_walk_query,
+)

@@ -1,0 +1,63 @@
+"""Subprocess helper: multi-device engine parity check.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=4 (the parent
+test sets this). Exits 0 on success.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import compile_plan  # noqa: E402
+from repro.core.distributed import build_sharded_tick  # noqa: E402
+from repro.core.engine import build_tick, current_matches  # noqa: E402
+from repro.core.query import QueryGraph  # noqa: E402
+from repro.core.state import init_state, make_batch  # noqa: E402
+from repro.stream.generator import StreamConfig, synth_traffic_stream, to_batches  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) == 4, jax.devices()
+    q = QueryGraph(3, (0, 1, 0), ((0, 1), (1, 2)), prec=frozenset({(0, 1)}))
+    q2 = QueryGraph(3, (0, 0, 1), ((0, 1), (1, 2), (2, 0)),
+                    prec=frozenset({(0, 2)}))
+    stream = synth_traffic_stream(StreamConfig(
+        n_edges=200, n_vertices=10, n_vertex_labels=2, n_edge_labels=2,
+        seed=11, ts_step_max=2))
+
+    for query in (q, q2):
+        window = 20
+        plan = compile_plan(query, window, level_capacity=2048,
+                            l0_capacity=2048, max_new=512)
+
+        # single device reference
+        tick1 = jax.jit(build_tick(plan))
+        s1 = init_state(plan)
+        total1 = 0
+        for b in to_batches(stream, 16):
+            s1, r = tick1(s1, make_batch(**b))
+            total1 += int(r.n_new_matches)
+        assert int(s1.stats.n_overflow) == 0
+
+        # 4-way sharded
+        mesh = jax.make_mesh((4,), ("data",))
+        tickN, sN = build_sharded_tick(plan, mesh, axes=("data",))
+        totalN = 0
+        for b in to_batches(stream, 16):
+            sN, r = tickN(sN, make_batch(**b))
+            totalN += int(r.n_new_matches)
+        assert int(sN.stats.n_overflow) == 0, "sharded overflow"
+
+        m1 = current_matches(plan, jax.device_get(s1))
+        mN = current_matches(plan, jax.device_get(sN))
+        assert total1 == totalN, (total1, totalN)
+        assert m1 == mN, (len(m1), len(mN))
+
+    print("DIST-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Multi-device engine parity: run the shard_map tick on 4 virtual CPU
+devices in a subprocess (device count must be set before jax init, and
+the main test process must keep seeing exactly 1 device)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+
+def test_sharded_engine_matches_single_device():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(root / "src")
+    proc = subprocess.run(
+        [sys.executable, str(root / "tests" / "_dist_engine_check.py")],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "DIST-OK" in proc.stdout

@@ -1,0 +1,149 @@
+"""Device engine vs exact oracle: after every tick the engine's window
+matches must equal the brute-force enumeration (streaming consistency +
+correctness of expansion lists, MS-tree reconstruction, and L0 joins)."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import compile_plan
+from repro.core.engine import build_tick, current_matches
+from repro.core.oracle import DataEdge, OracleEngine
+from repro.core.query import QueryGraph, example_paper_query
+from repro.core.state import init_state, make_batch
+from repro.stream.generator import StreamConfig, synth_traffic_stream, to_batches
+
+
+def run_engine_vs_oracle(q, stream, window, batch_size, level_capacity=512,
+                         max_new=256, check_every=1):
+    plan = compile_plan(q, window, level_capacity=level_capacity,
+                        l0_capacity=level_capacity, max_new=max_new)
+    tick = jax.jit(build_tick(plan))
+    state = init_state(plan)
+    oracle = OracleEngine(q, window)
+    total_new = 0
+    prev = set()
+    for bi, b in enumerate(to_batches(stream, batch_size)):
+        state, res = tick(state, make_batch(**b))
+        for e in [e for e in stream[bi * batch_size:(bi + 1) * batch_size]]:
+            oracle.insert(e)
+        assert int(state.stats.n_overflow) == 0, "test capacity too small"
+        total_new += int(res.n_new_matches)
+        if bi % check_every == 0:
+            got = current_matches(plan, state)
+            want = oracle.matches()
+            assert got == want, (
+                f"tick {bi}: engine {len(got)} vs oracle {len(want)} matches"
+            )
+            # every new match reported exactly once
+            assert total_new >= len(want - prev)
+            prev = want
+    return total_new
+
+
+def tri_query():
+    """Triangle a->b->c->a with timing chain — a TC-query."""
+    return QueryGraph(
+        3, (0, 1, 2), ((0, 1), (1, 2), (2, 0)),
+        prec=frozenset({(0, 1), (1, 2)}),
+    )
+
+
+def star_query():
+    """Out-star with no timing order: decomposes into singleton subqueries."""
+    return QueryGraph(4, (0, 1, 1, 1), ((0, 1), (0, 2), (0, 3)))
+
+
+def two_chain_query():
+    """Two 2-chains joined at a vertex, chains internally ≺-ordered."""
+    return QueryGraph(
+        5, (0, 1, 2, 1, 2),
+        ((0, 1), (1, 2), (0, 3), (3, 4)),
+        prec=frozenset({(0, 1), (2, 3)}),
+    )
+
+
+def small_stream(n_edges, n_vertices=12, n_vertex_labels=3, n_edge_labels=2,
+                 seed=0):
+    return synth_traffic_stream(StreamConfig(
+        n_edges=n_edges, n_vertices=n_vertices,
+        n_vertex_labels=n_vertex_labels, n_edge_labels=n_edge_labels,
+        seed=seed, ts_step_max=2))
+
+
+@pytest.mark.parametrize("batch_size", [1, 4, 16])
+def test_tc_chain_query_vs_oracle(batch_size):
+    q = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2)), prec=frozenset({(0, 1)}))
+    stream = small_stream(120, seed=1)
+    run_engine_vs_oracle(q, stream, window=20, batch_size=batch_size)
+
+
+@pytest.mark.parametrize("batch_size", [1, 8])
+def test_triangle_vs_oracle(batch_size):
+    stream = small_stream(150, n_vertices=8, seed=2)
+    run_engine_vs_oracle(tri_query(), stream, window=25, batch_size=batch_size)
+
+
+@pytest.mark.parametrize("batch_size", [1, 8])
+def test_star_no_timing_vs_oracle(batch_size):
+    stream = small_stream(100, n_vertices=10, n_vertex_labels=2, seed=3)
+    run_engine_vs_oracle(star_query(), stream, window=15,
+                         batch_size=batch_size, level_capacity=1024)
+
+
+@pytest.mark.parametrize("batch_size", [1, 8])
+def test_two_chains_vs_oracle(batch_size):
+    stream = small_stream(150, n_vertices=10, seed=4)
+    run_engine_vs_oracle(two_chain_query(), stream, window=20,
+                         batch_size=batch_size)
+
+
+def test_example_paper_query_vs_oracle():
+    stream = small_stream(150, n_vertices=10, n_vertex_labels=5, seed=5)
+    run_engine_vsoracle = run_engine_vs_oracle(
+        example_paper_query(), stream, window=30, batch_size=8,
+        level_capacity=1024)
+
+
+def test_batched_equals_sequential():
+    """Streaming consistency: batch sizes must not change results."""
+    q = tri_query()
+    stream = small_stream(200, n_vertices=8, seed=6)
+    window = 30
+    finals = []
+    for bs in (1, 5, 16):
+        plan = compile_plan(q, window, level_capacity=1024, max_new=512)
+        tick = jax.jit(build_tick(plan))
+        state = init_state(plan)
+        for b in to_batches(stream, bs):
+            state, _ = tick(state, make_batch(**b))
+        finals.append((current_matches(plan, state),
+                       int(state.stats.n_matches_total)))
+    assert finals[0] == finals[1] == finals[2]
+
+
+def test_expiry_removes_matches():
+    q = QueryGraph(2, (0, 1), ((0, 1),))
+    plan = compile_plan(q, window=5)
+    tick = jax.jit(build_tick(plan))
+    state = init_state(plan)
+    state, res = tick(state, make_batch([0], [1], [10], [0], [1], [0]))
+    assert int(res.n_new_matches) == 1
+    assert len(current_matches(plan, state)) == 1
+    # an edge far in the future expires the old one
+    state, res = tick(state, make_batch([5], [6], [100], [0], [1], [0]))
+    assert len(current_matches(plan, state)) == 1  # only the new edge's match
+
+
+def test_discardable_edge_pruned():
+    """Lemma 1: an edge matching ε2 with no ε1-match in window joins nothing
+    and occupies no space beyond its own level."""
+    q = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2)), prec=frozenset({(0, 1)}))
+    plan = compile_plan(q, window=50)
+    tick = jax.jit(build_tick(plan))
+    state = init_state(plan)
+    # edge matching ε2 (labels 1->2) arrives first: discardable for level 2
+    state, res = tick(state, make_batch([7], [8], [1], [1], [2], [0]))
+    assert int(res.n_new_matches) == 0
+    assert not bool(state.levels[0][1].valid.any())

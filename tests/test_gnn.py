@@ -1,0 +1,141 @@
+"""GNN model tests: shapes/NaNs, aggregation semantics, NequIP rotation
+equivariance + force consistency, neighbor sampler invariants."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import models as M
+from repro.models.gnn import nequip as NQ
+from repro.models.gnn.message import degrees, gather_scatter, segment_softmax
+from repro.models.gnn.sampler import CSRGraph, sample_subgraph, subgraph_shapes
+
+
+def rand_graph(rng, n=20, e=60, f=16, classes=5, pad_e=8):
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    src = np.concatenate([src, np.full(pad_e, -1, np.int32)])
+    dst = np.concatenate([dst, np.full(pad_e, -1, np.int32)])
+    return {
+        "x": jnp.asarray(rng.standard_normal((n, f)), jnp.float32),
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+        "labels": jnp.asarray(rng.integers(0, classes, n).astype(np.int32)),
+    }
+
+
+@pytest.mark.parametrize("arch", ["gat", "gin", "pna"])
+def test_forward_shapes_nans(arch):
+    rng = np.random.default_rng(0)
+    cfg = M.GNNConfig(arch=arch, n_layers=2, d_in=16, d_hidden=12,
+                      n_heads=4, n_classes=5)
+    g = rand_graph(rng)
+    params = M.INITS[arch](jax.random.PRNGKey(0), cfg)
+    out = M.FORWARDS[arch](params, g, cfg)
+    assert out.shape == (20, 5)
+    assert np.isfinite(np.asarray(out)).all()
+    loss, _ = M.node_classification_loss(params, g, cfg)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: M.node_classification_loss(p, g, cfg)[0])(params)
+    for gl in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(gl)).all()
+
+
+def test_gather_scatter_against_numpy():
+    rng = np.random.default_rng(1)
+    n, e, d = 10, 40, 6
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    got = gather_scatter(jnp.asarray(x), jnp.asarray(src), jnp.asarray(dst), n)
+    want = np.zeros((n, d), np.float32)
+    for s, t in zip(src, dst):
+        want[t] += x[s]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_segment_softmax_sums_to_one():
+    rng = np.random.default_rng(2)
+    e, n, h = 50, 8, 3
+    seg = rng.integers(0, n, e).astype(np.int32)
+    sc = rng.standard_normal((e, h)).astype(np.float32)
+    alpha = segment_softmax(jnp.asarray(sc), jnp.asarray(seg), n)
+    sums = np.zeros((n, h))
+    for i, s in enumerate(seg):
+        sums[s] += np.asarray(alpha)[i]
+    present = np.isin(np.arange(n), seg)
+    np.testing.assert_allclose(sums[present], 1.0, rtol=1e-5)
+
+
+def _mol_graph(rng, n=12, e=40):
+    pos = rng.standard_normal((n, 3)).astype(np.float32) * 2
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    return {
+        "species": jnp.asarray(rng.integers(0, 4, n).astype(np.int32)),
+        "pos": jnp.asarray(pos),
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+    }
+
+
+def test_nequip_equivariance():
+    """Energy invariant under global rotation; forces rotate covariantly."""
+    rng = np.random.default_rng(3)
+    cfg = NQ.NequIPConfig(n_layers=2, channels=8, n_rbf=4)
+    params = NQ.init(jax.random.PRNGKey(0), cfg)
+    g = _mol_graph(rng)
+
+    # random rotation via QR
+    a = rng.standard_normal((3, 3))
+    q, r = np.linalg.qr(a)
+    q = q * np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    R = jnp.asarray(q.astype(np.float32))
+
+    e1, f1 = NQ.energy_and_forces(params, g, cfg)
+    g_rot = {**g, "pos": g["pos"] @ R.T}
+    e2, f2 = NQ.energy_and_forces(params, g_rot, cfg)
+
+    np.testing.assert_allclose(float(e1), float(e2), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(f1 @ R.T), np.asarray(f2),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_nequip_translation_invariance():
+    rng = np.random.default_rng(4)
+    cfg = NQ.NequIPConfig(n_layers=2, channels=8, n_rbf=4)
+    params = NQ.init(jax.random.PRNGKey(0), cfg)
+    g = _mol_graph(rng)
+    e1 = NQ.forward(params, g, cfg)
+    g2 = {**g, "pos": g["pos"] + jnp.asarray([1.7, -0.3, 2.2])}
+    e2 = NQ.forward(params, g2, cfg)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-5)
+
+
+def test_sampler_invariants():
+    rng = np.random.default_rng(5)
+    n, e = 200, 2000
+    src = rng.integers(0, n, e).astype(np.int64)
+    dst = rng.integers(0, n, e).astype(np.int64)
+    g = CSRGraph(n, src, dst)
+    seeds = rng.choice(n, 16, replace=False)
+    fanouts = (5, 3)
+    sub = sample_subgraph(g, seeds, fanouts, rng)
+    n_max, e_max = subgraph_shapes(16, fanouts)
+    assert sub["nodes"].shape == (n_max,)
+    assert sub["edge_src"].shape == (e_max,)
+    # seeds come first in node list
+    np.testing.assert_array_equal(sub["nodes"][:16], seeds)
+    # every sampled edge exists in the original graph
+    edge_set = set(zip(src.tolist(), dst.tolist()))
+    for s_l, d_l in zip(sub["edge_src"], sub["edge_dst"]):
+        if s_l < 0:
+            continue
+        u, v = int(sub["nodes"][s_l]), int(sub["nodes"][d_l])
+        assert (u, v) in edge_set

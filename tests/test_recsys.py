@@ -1,0 +1,69 @@
+"""Wide&Deep + retrieval tests."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.recsys import wide_deep as WD
+
+
+def small_cfg():
+    return WD.WideDeepConfig(
+        n_sparse=6, vocab_per_field=50, embed_dim=8, n_dense=4,
+        mlp=(32, 16), wide_vocab=100, n_wide_crosses=5)
+
+
+def rand_batch(rng, cfg, b=16):
+    wide = rng.integers(0, cfg.wide_vocab, (b, cfg.n_wide_crosses))
+    wide[rng.random(wide.shape) < 0.3] = -1
+    return {
+        "sparse_ids": jnp.asarray(
+            rng.integers(0, cfg.vocab_per_field, (b, cfg.n_sparse)), jnp.int32),
+        "dense": jnp.asarray(rng.standard_normal((b, cfg.n_dense)), jnp.float32),
+        "wide_ids": jnp.asarray(wide.astype(np.int32)),
+        "labels": jnp.asarray(rng.integers(0, 2, b).astype(np.int32)),
+    }
+
+
+def test_forward_and_loss_finite():
+    rng = np.random.default_rng(0)
+    cfg = small_cfg()
+    params = WD.init(jax.random.PRNGKey(0), cfg)
+    batch = rand_batch(rng, cfg)
+    logit = WD.forward(params, batch, cfg)
+    assert logit.shape == (16,)
+    assert np.isfinite(np.asarray(logit)).all()
+    loss, _ = WD.bce_loss(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: WD.bce_loss(p, batch, cfg)[0])(params)
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_wide_bag_matches_manual():
+    rng = np.random.default_rng(1)
+    cfg = small_cfg()
+    params = WD.init(jax.random.PRNGKey(0), cfg)
+    batch = rand_batch(rng, cfg, b=8)
+    logit = np.asarray(WD.forward(params, batch, cfg))
+    # recompute the wide contribution by hand
+    wide = np.asarray(params["wide"])
+    wid = np.asarray(batch["wide_ids"])
+    manual = np.array([
+        sum(wide[i] for i in row if i >= 0) for row in wid
+    ])
+    # deep part from forward with zeroed wide table
+    params2 = dict(params)
+    params2["wide"] = jnp.zeros_like(params["wide"])
+    deep_only = np.asarray(WD.forward(params2, batch, cfg))
+    np.testing.assert_allclose(logit - deep_only, manual, rtol=1e-4, atol=1e-5)
+
+
+def test_retrieval_topk():
+    rng = np.random.default_rng(2)
+    cands = jnp.asarray(rng.standard_normal((1000, 16)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    vals, idx = WD.retrieval_score(u, cands, top_k=10)
+    scores = np.asarray(cands @ u)
+    np.testing.assert_array_equal(np.asarray(idx), np.argsort(-scores)[:10])

@@ -1,0 +1,81 @@
+"""Roofline HLO parser unit tests + cell-builder coverage (no mesh —
+single-device SDS construction only; full lowering is the dry-run's job)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.launch import roofline as RL
+from repro.launch.cells import all_cells, build_cell, lm_param_flops
+
+
+HLO = """
+  %ar = f32[1024,512]{1,0} all-reduce(f32[1024,512]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = bf16[2048,128]{1,0} all-gather(bf16[1024,128]{1,0} %y), replica_groups=[2,2]<=[4], dimensions={0}
+  %rs = f32[256]{0} reduce-scatter(f32[1024]{0} %z), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = s32[64]{0} collective-permute(s32[64]{0} %w), source_target_pairs={{0,1}}
+  %fusion.1 = f32[8,8] fusion(%a), kind=kLoop
+"""
+
+
+def test_collective_parser():
+    c = RL.collective_bytes(HLO)
+    assert c["n_ops"] == 4
+    # all-reduce: 2 * 1024*512*4 * 3/4
+    np.testing.assert_allclose(c["all-reduce"], 2 * 1024 * 512 * 4 * 0.75)
+    # all-gather: result 2048*128*2 bytes * (2-1)/2
+    np.testing.assert_allclose(c["all-gather"], 2048 * 128 * 2 * 0.5)
+    # reduce-scatter: result 256*4 * (n-1)
+    np.testing.assert_allclose(c["reduce-scatter"], 256 * 4 * 3)
+    assert c["collective-permute"] == 64 * 4
+    assert c["total"] == sum(
+        c[k] for k in ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+
+
+def test_roofline_terms():
+    cost = {"flops": 197e12, "bytes accessed": 819e9}
+    coll = {"total": 50e9}
+    t = RL.roofline_terms(cost, coll, n_chips=4, model_flops=4 * 197e12)
+    np.testing.assert_allclose(t["compute_s"], 1.0)
+    np.testing.assert_allclose(t["memory_s"], 1.0)
+    np.testing.assert_allclose(t["collective_s"], 1.0)
+    np.testing.assert_allclose(t["useful_flops_ratio"], 1.0)
+
+
+def test_all_cells_enumerates_40():
+    cells = all_cells()
+    assert len(cells) == 40
+    assert len({a for a, _ in cells}) == 10
+
+
+def test_lm_param_counts_match_published_scale():
+    """Total parameter counts should land near the models' nameplates."""
+    expect = {
+        "deepseek-coder-33b": 33e9,
+        "qwen3-14b": 14e9,
+        "internlm2-20b": 20e9,
+        "arctic-480b": 480e9,
+        "grok-1-314b": 314e9,
+    }
+    for aid, nominal in expect.items():
+        total, active = lm_param_flops(ARCHS[aid].config)
+        assert 0.55 * nominal < total < 1.45 * nominal, (aid, total)
+        assert active <= total
+
+
+@pytest.mark.parametrize("arch_id,shape", [
+    ("deepseek-coder-33b", "train_4k"),
+    ("arctic-480b", "decode_32k"),
+    ("nequip", "molecule"),
+    ("pna", "minibatch_lg"),
+    ("wide-deep", "retrieval_cand"),
+])
+def test_build_cell_without_mesh(arch_id, shape):
+    """Cells construct ShapeDtypeStruct args without any device allocation."""
+    cell = build_cell(arch_id, shape, mesh=None)
+    import jax
+    for leaf in jax.tree.leaves(cell.args):
+        assert hasattr(leaf, "shape") and hasattr(leaf, "dtype")
+        assert not hasattr(leaf, "addressable_data")  # no real arrays
+    assert cell.meta.get("model_flops", 0) > 0

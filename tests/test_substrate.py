@@ -1,0 +1,149 @@
+"""Substrate tests: optimizer modes, checkpoint roundtrip/reshard/async,
+fault-tolerant restart determinism, gradient compression, coalescer."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_with_warmup
+from repro.optim.compress import dequantize_tree, quantize_tree
+from repro.runtime.fault import FaultTolerantLoop, SimulatedFailure
+from repro.runtime.straggler import TickCoalescer
+
+
+def toy_problem():
+    rng = np.random.default_rng(0)
+    w_true = rng.standard_normal((8, 4)).astype(np.float32)
+    x = rng.standard_normal((64, 8)).astype(np.float32)
+    y = x @ w_true
+
+    def loss(params):
+        pred = x @ params["w"] + params["b"]
+        return jnp.mean((pred - y) ** 2)
+
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    return loss, params
+
+
+@pytest.mark.parametrize("mode", ["fp32", "factored", "int8"])
+def test_adamw_modes_converge(mode):
+    loss, params = toy_problem()
+    cfg = AdamWConfig(state_mode=mode, weight_decay=0.0)
+    state = adamw_init(params, cfg)
+    l0 = float(loss(params))
+    step = jax.jit(lambda p, s: adamw_update(jax.grad(loss)(p), s, p, 0.05, cfg))
+    for _ in range(150):
+        params, state, _ = step(params, state)
+    l1 = float(loss(params))
+    assert l1 < l0 * 0.05, (l0, l1)
+
+
+def test_factored_state_is_smaller():
+    _, params = toy_problem()
+    big = {"w": jnp.zeros((256, 128))}
+    full = adamw_init(big, AdamWConfig(state_mode="fp32"))
+    fact = adamw_init(big, AdamWConfig(state_mode="factored"))
+    size = lambda t: sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+    assert size(fact) < size(full) * 0.6
+
+
+def test_schedule():
+    lr = cosine_with_warmup(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < float(lr(50)) < float(lr(10))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.array(3), "d": [jnp.ones(2), jnp.zeros(1)]}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    got = restore_checkpoint(str(tmp_path), 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path))
+    tree = {"w": jnp.ones((16, 16))}
+    for s in (10, 20):
+        ck.save(s, tree)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 20
+
+
+def test_fault_tolerant_loop_determinism(tmp_path):
+    """A crash mid-run + restart must reproduce the uninterrupted result."""
+    loss, params0 = toy_problem()
+    cfg = AdamWConfig(weight_decay=0.0)
+
+    def make_state():
+        p = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+        return {"params": p, "opt": adamw_init(p, cfg)}
+
+    @jax.jit
+    def train_step(state):
+        g = jax.grad(loss)(state["params"])
+        p, o, _ = adamw_update(g, state["opt"], state["params"], 0.05, cfg)
+        return {"params": p, "opt": o}
+
+    # reference: uninterrupted
+    ref = make_state()
+    for _ in range(40):
+        ref = train_step(ref)
+
+    crashed = {"done": False}
+
+    def step_fn(state, i):
+        if i == 23 and not crashed["done"]:
+            crashed["done"] = True
+            raise SimulatedFailure("injected")
+        return train_step(state)
+
+    loop = FaultTolerantLoop(
+        str(tmp_path), step_fn, make_state, ckpt_every=10)
+    final = loop.run(40)
+    assert crashed["done"] and loop.restarts == 1
+    np.testing.assert_allclose(
+        np.asarray(final["params"]["w"]), np.asarray(ref["params"]["w"]),
+        rtol=1e-6, atol=1e-7)
+
+
+def test_quantize_error_feedback():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    q, s, res = quantize_tree(g)
+    deq = dequantize_tree(q, s)
+    err = float(jnp.abs(deq["w"] - g["w"]).max())
+    scale = float(s["w"])
+    assert err <= scale * 0.5 + 1e-6
+    # residual carries exactly the quantization error
+    np.testing.assert_allclose(
+        np.asarray(res["w"]), np.asarray(g["w"] - deq["w"]),
+        rtol=1e-5, atol=1e-6)
+    # int8 payload is 4x smaller than fp32
+    assert q["w"].dtype == jnp.int8
+
+
+def test_tick_coalescer_adapts():
+    c = TickCoalescer(batch=256, target_latency_ms=50)
+    # fast ticks + growing queue -> batch grows
+    for _ in range(5):
+        b = c.record(tick_latency_ms=5.0, queue_depth=10_000)
+    assert b > 256
+    peak = b
+    # slow ticks -> batch shrinks
+    for _ in range(10):
+        b = c.record(tick_latency_ms=200.0, queue_depth=0)
+    assert b < peak * 0.5

@@ -1,0 +1,132 @@
+"""Transformer family unit tests: dense/MoE forward, loss, decode-vs-
+prefill consistency, MoE dispatch exactness."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.moe import moe_ffn
+
+
+def tiny_cfg(**kw):
+    base = dict(
+        name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab=97, dtype=jnp.float32,
+        attn_chunk=8, remat="none")
+    base.update(kw)
+    return tfm.LMConfig(**base)
+
+
+def test_forward_shapes_and_finite():
+    cfg = tiny_cfg()
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    logits, aux = tfm.forward(params, tokens, cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    loss, metrics = tfm.loss_fn(params, tokens, cfg)
+    assert np.isfinite(float(loss))
+
+
+def test_moe_forward_finite_and_aux():
+    cfg = tiny_cfg(moe=True, n_experts=4, moe_topk=2, dense_residual=True,
+                   residual_d_ff=64)
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    loss, metrics = tfm.loss_fn(params, tokens, cfg)
+    assert np.isfinite(float(loss))
+    assert float(metrics["aux"]) > 0.0
+
+
+def test_qk_norm_path():
+    cfg = tiny_cfg(qk_norm=True)
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.zeros((1, 8), jnp.int32)
+    logits, _ = tfm.forward(params, tokens, cfg)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_causality():
+    """Changing a future token must not affect past logits."""
+    cfg = tiny_cfg()
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 1) % cfg.vocab)
+    l1, _ = tfm.forward(params, t1, cfg)
+    l2, _ = tfm.forward(params, t2, cfg)
+    np.testing.assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_prefill():
+    """Greedy decode logits must equal teacher-forced forward logits."""
+    cfg = tiny_cfg()
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    b, s, smax = 2, 10, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab)
+    full_logits, _ = tfm.forward(params, tokens, cfg)
+
+    kc = jnp.zeros((cfg.n_layers, b, smax, cfg.n_kv_heads, cfg.head_dim))
+    vc = jnp.zeros_like(kc)
+    length = jnp.zeros((b,), jnp.int32)
+    cache = (kc, vc, length)
+    step_logits = []
+    for i in range(s):
+        lg, cache = tfm.serve_step(params, tokens[:, i:i + 1], cache, cfg)
+        step_logits.append(lg)
+    got = jnp.stack(step_logits, axis=1)        # [B, S, V]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_attention():
+    cfg = tiny_cfg(attn_window=4)
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab)
+    # token 0 is outside the window of position 11: changing it must not
+    # affect the last logit... (strictly: it can via layer stacking; use
+    # a 1-layer config for the strict check)
+    cfg1 = tiny_cfg(attn_window=4, n_layers=1)
+    p1 = tfm.init(jax.random.PRNGKey(0), cfg1)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 1) % cfg1.vocab)
+    l1, _ = tfm.forward(p1, t1, cfg1)
+    l2, _ = tfm.forward(p1, t2, cfg1)
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_dispatch_matches_dense_loop():
+    """Sort-based capacity dispatch == explicit per-token loop (ample cap)."""
+    rng = np.random.default_rng(0)
+    t, d, e, f = 32, 16, 4, 24
+
+    class C:
+        n_experts = e
+        moe_topk = 2
+        capacity_factor = 8.0   # ample: no drops
+        moe_renorm = True
+        moe_lb_coef = 0.0
+        moe_z_coef = 0.0
+
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    p = {
+        "wg": jnp.asarray(rng.standard_normal((d, e)), jnp.float32) * 0.1,
+        "w1": jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32) * 0.1,
+        "w3": jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32) * 0.1,
+        "w2": jnp.asarray(rng.standard_normal((e, f, d)), jnp.float32) * 0.1,
+    }
+    got, _ = moe_ffn(x, p, C)
+
+    gates = jax.nn.softmax(x @ p["wg"], axis=-1)
+    topw, topi = jax.lax.top_k(gates, 2)
+    topw = topw / topw.sum(-1, keepdims=True)
+    want = np.zeros((t, d), np.float32)
+    for ti in range(t):
+        for kk in range(2):
+            ei = int(topi[ti, kk])
+            h = jax.nn.silu(x[ti] @ p["w1"][ei]) * (x[ti] @ p["w3"][ei])
+            want[ti] += float(topw[ti, kk]) * np.asarray(h @ p["w2"][ei])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
