@@ -12,7 +12,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import bench_engine, bench_kernels
+from benchmarks import bench_engine, bench_kernels, bench_multiquery
 
 
 def main() -> None:
@@ -31,6 +31,9 @@ def main() -> None:
     bench_engine.selectivity(reduced)                 # Fig 21
     bench_engine.rescan_baseline(reduced)             # Fan-et-al regime
     bench_kernels.compat_join_scaling(reduced)
+    bench_multiquery.main(                            # multi-tenant serving
+        n_queries=6 if reduced else 12,
+        n_edges=3000 if reduced else 20000)
     print(f"# total bench wall time: {time.time() - t0:.1f}s")
 
 

@@ -1,0 +1,75 @@
+"""Multi-tenant continuous search: many standing queries, one stream.
+
+Demonstrates the service layer built on the multi-query engine:
+
+  1. register several timing-constrained queries (different tenants);
+  2. ingest a live edge stream batch-by-batch, collecting per-query
+     match deltas as they happen;
+  3. register a NEW query mid-stream — because it shares a structural
+     signature with an existing slot group, no recompilation happens
+     (watch ``svc.n_compiles``);
+  4. unregister a tenant and keep serving the rest.
+
+Run:  PYTHONPATH=src python examples/multi_query_service.py
+"""
+
+from repro.core.query import QueryGraph
+from repro.runtime.service import ContinuousSearchService
+from repro.stream.generator import StreamConfig, synth_traffic_stream, to_batches
+
+
+def main():
+    # A traffic-like stream: 3 vertex labels (host classes), 4 edge labels
+    # (ports).  Think intrusion patterns over flow records.
+    stream = synth_traffic_stream(StreamConfig(
+        n_edges=2000, n_vertices=60, n_vertex_labels=3, n_edge_labels=4,
+        seed=7, ts_step_max=2))
+    batches = list(to_batches(stream, 64))
+
+    svc = ContinuousSearchService(
+        slots_per_group=4, level_capacity=4096, l0_capacity=4096, max_new=1024)
+
+    # Tenant A: lateral movement — a timing-ordered 2-hop chain 0 -> 1 -> 2.
+    chain = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2)),
+                       prec=frozenset({(0, 1)}))
+    # Tenant B: beaconing triangle with a full timing order.
+    tri = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2), (2, 0)),
+                     prec=frozenset({(0, 1), (1, 2)}))
+    qa = svc.register(chain, window=60)
+    qb = svc.register(tri, window=80)
+    print(f"registered qa={qa} (chain) qb={qb} (triangle); "
+          f"compiles so far: {svc.n_compiles}")
+
+    counts = {qa: 0, qb: 0}
+    half = len(batches) // 2
+    for b in batches[:half]:
+        for qid, res in svc.ingest(b).items():
+            counts[qid] += int(res.n_new_matches)
+    print(f"mid-stream: chain={counts[qa]} triangle={counts[qb]} new matches")
+
+    # Tenant C arrives mid-stream with a *relabeled* chain (hosts of class
+    # 2 -> 0 -> 1).  Same structure as tenant A's chain, so registration
+    # is a pure slot write: n_compiles must not move.
+    before = svc.n_compiles
+    chain_c = QueryGraph(3, (2, 0, 1), ((0, 1), (1, 2)),
+                         prec=frozenset({(0, 1)}))
+    qc = svc.register(chain_c, window=60)
+    assert svc.n_compiles == before, "same-structure registration recompiled!"
+    print(f"registered qc={qc} mid-stream with NO recompile "
+          f"(compiles: {svc.n_compiles})")
+
+    svc.unregister(qb)  # tenant B leaves; its slot is reusable
+    counts[qc] = 0
+    for b in batches[half:]:
+        for qid, res in svc.ingest(b).items():
+            counts[qid] += int(res.n_new_matches)
+
+    print(f"end of stream: chain={counts[qa]} relabeled-chain={counts[qc]} "
+          f"new matches over {svc.n_edges_ingested} edges")
+    print(f"windowed matches live right now: qa={len(svc.matches(qa))} "
+          f"qc={len(svc.matches(qc))}")
+    print(f"total slot-group compiles for 3 tenants + churn: {svc.n_compiles}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,11 @@ plan        Compilation of a decomposed query into numeric join specs
             binding-slot layouts) consumed by the device engine.
 state       Fixed-capacity device tables: per-level MS-tree SoA storage.
 engine      ``tick()``: batched insert/expire with streaming consistency.
+multi       Multi-query fusion: ``build_multi_tick`` (one label-match
+            phase for N queries) and padded-slot ticks (vmapped over
+            same-structure query slots; recompile-free registration).
+registry    ``QueryRegistry``: standing-query lifecycle + structural
+            plan signatures used to bucket queries into slot groups.
 oracle      Exact pure-Python reference engine used as the test oracle.
 sjtree      SJ-tree baseline (Choudhury et al. 2015) + timing post-filter.
 distributed shard_map-wrapped tick for multi-device execution.
@@ -18,3 +23,10 @@ distributed shard_map-wrapped tick for multi-device execution.
 from repro.core.query import QueryGraph
 from repro.core.decompose import decompose, tc_subqueries, join_order
 from repro.core.plan import ExecutionPlan, compile_plan
+from repro.core.multi import (
+    MultiEngineState,
+    build_multi_tick,
+    build_slot_tick,
+    init_multi_state,
+)
+from repro.core.registry import QueryRegistry, plan_signature

@@ -16,9 +16,32 @@ reconstruction, expiry cascades — is shard-local by construction
 
 from __future__ import annotations
 
+import inspect
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# JAX moved shard_map around across releases: 0.4.x ships it under
+# jax.experimental.shard_map; newer versions expose jax.shard_map.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _shard_map_compat_kwargs() -> dict:
+    """Disable replication/VMA checking under whichever name this JAX
+    version uses (``check_vma`` on new JAX, ``check_rep`` on 0.4.x); the
+    engine's out_specs mix replicated scalars with sharded tables, which
+    the strict checker rejects on some versions."""
+    try:
+        params = inspect.signature(_shard_map).parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtin/odd callables
+        return {}
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return {name: False}
+    return {}
 
 from repro.core import join as J
 from repro.core.engine import build_tick
@@ -80,12 +103,12 @@ def build_sharded_tick(
     )
 
     tick = jax.jit(
-        jax.shard_map(
+        _shard_map(
             inner,
             mesh=mesh,
             in_specs=(specs, batch_specs),
             out_specs=(specs, out_res_specs),
-            check_vma=False,
+            **_shard_map_compat_kwargs(),
         )
     )
 

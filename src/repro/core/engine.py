@@ -131,7 +131,26 @@ def _compact(view: _View, mask, size: int):
     )
 
 
-def build_tick(
+def edge_match_mask(batch: EdgeBatch, esl, edl, eel) -> jnp.ndarray:
+    """Per-query-edge label match mask ``[n_qedges, B]``.
+
+    ``esl`` / ``edl`` / ``eel`` are the query's per-edge src-vertex,
+    dst-vertex, and edge label arrays (``eel < 0`` = wildcard).  They may
+    be compile-time constants (single-query ``build_tick``) or traced
+    runtime arrays (the multi-query fused / slot ticks), which is what
+    lets a service register a same-shaped query without recompiling.
+    """
+    no_selfloop = batch.src != batch.dst
+    return (
+        batch.valid[None, :]
+        & no_selfloop[None, :]
+        & (batch.src_label[None, :] == esl[:, None])
+        & (batch.dst_label[None, :] == edl[:, None])
+        & ((eel[:, None] < 0) | (batch.edge_label[None, :] == eel[:, None]))
+    )
+
+
+def build_tick_body(
     plan: ExecutionPlan,
     backend: str = J.JoinBackend.REF,
     extract_matches: bool = True,
@@ -139,31 +158,21 @@ def build_tick(
     axis_name: str | None = None,
     n_shards: int = 1,
 ):
-    """Compile ``plan`` into a jit-able ``tick(state, batch) -> (state, res)``.
+    """Compile the *structural* part of ``plan`` into a tick body.
 
-    ``backend`` selects the compatibility-join implementation (pure jnp
-    reference or the Pallas kernel).  ``extract_matches=False`` skips
-    materializing result bindings (throughput mode).
-
-    Distribution (``axis_name`` set, run under shard_map): every table's
-    capacity axis is sharded.  Three design rules keep almost all work
-    local:
-      * level-1 appends are round-robined over shards by batch position;
-      * a level-j row lands on its parent's shard, so MS-tree parent
-        chains NEVER cross shards and reconstruction is collective-free;
-      * L0 delta joins all-gather only the (small) per-tick delta rows,
-        never the tables.  Scalar stats/results are psum'd.
+    Returns ``body(state, batch, ematch, window) -> (state, TickResult)``
+    where ``ematch`` is the ``[n_qedges, B]`` label-match mask (see
+    ``edge_match_mask``) and ``window`` the sliding-window span.  Both are
+    runtime inputs: everything the body closes over — expansion-list
+    layouts, REL/TREL matrices, capacities — depends only on the query's
+    *structure* (shape + timing order), not on its labels.  The
+    single-query ``build_tick``, the fused ``build_multi_tick``, and the
+    padded-slot ``build_slot_tick`` (repro.core.multi) all share this
+    body, which is what makes the multi-query oracle equivalence hold by
+    construction.
     """
-    q = plan.query
-    window = plan.window
     max_out = max_out or max(js.max_new for js in plan.l0_joins) if plan.l0_joins \
         else (max_out or plan.subqueries[0].levels[-1].max_new)
-
-    # ---- host-side constants ---------------------------------------- #
-    esl = jnp.asarray(plan.edge_src_label)
-    edl = jnp.asarray(plan.edge_dst_label)
-    eel = jnp.asarray(plan.edge_edge_label)
-    n_qedges = q.n_edges
 
     # per-(subquery, level>=1) REL for the edge join
     level_rel: dict[tuple[int, int], np.ndarray] = {}
@@ -209,7 +218,7 @@ def build_tick(
         )
         return tuple(new_levels), new_l0
 
-    def tick(state: EngineState, batch: EdgeBatch):
+    def body(state: EngineState, batch: EdgeBatch, ematch, window):
         # -- 0. advance time; clear last tick's fresh marks ------------ #
         # NOTE: expiry is deferred to the END of the tick.  Mid-tick, the
         # window-span predicate inside every join plays the role of the
@@ -227,14 +236,6 @@ def build_tick(
         n_overflow = jnp.zeros((), I32)
 
         # -- 1. per-query-edge label match mask [n_qedges, B] ---------- #
-        no_selfloop = batch.src != batch.dst
-        ematch = (
-            batch.valid[None, :]
-            & no_selfloop[None, :]
-            & (batch.src_label[None, :] == esl[:, None])
-            & (batch.dst_label[None, :] == edl[:, None])
-            & ((eel[:, None] < 0) | (batch.edge_label[None, :] == eel[:, None]))
-        )
         edge_used = jnp.any(ematch, axis=0)
         n_discard = jnp.sum(batch.valid & ~edge_used, dtype=I32)
 
@@ -390,6 +391,54 @@ def build_tick(
         )
         new_state = EngineState(levels=levels, l0=l0, t_now=t_now, stats=stats)
         return new_state, TickResult(n_new, n_overflow, mb, me, mv)
+
+    return body
+
+
+def build_tick(
+    plan: ExecutionPlan,
+    backend: str = J.JoinBackend.REF,
+    extract_matches: bool = True,
+    max_out: int | None = None,
+    axis_name: str | None = None,
+    n_shards: int = 1,
+):
+    """Compile ``plan`` into a jit-able ``tick(state, batch) -> (state, res)``.
+
+    ``backend`` selects the compatibility-join implementation
+    (``JoinBackend.REF`` pure jnp reference, ``JoinBackend.PALLAS`` TPU
+    kernel, ``JoinBackend.PALLAS_INTERPRET`` CPU-interpreted kernel).
+    ``extract_matches=False`` skips materializing result bindings
+    (throughput mode).
+
+    Distribution (``axis_name`` set, run under shard_map): every table's
+    capacity axis is sharded.  Three design rules keep almost all work
+    local:
+      * level-1 appends are round-robined over shards by batch position;
+      * a level-j row lands on its parent's shard, so MS-tree parent
+        chains NEVER cross shards and reconstruction is collective-free;
+      * L0 delta joins all-gather only the (small) per-tick delta rows,
+        never the tables.  Scalar stats/results are psum'd.
+
+    For serving many standing queries against one stream, see
+    ``repro.core.multi.build_multi_tick`` (fused label-match phase) and
+    ``repro.runtime.service`` (recompile-free registration).
+    """
+    body = build_tick_body(
+        plan,
+        backend=backend,
+        extract_matches=extract_matches,
+        max_out=max_out,
+        axis_name=axis_name,
+        n_shards=n_shards,
+    )
+    esl = jnp.asarray(plan.edge_src_label)
+    edl = jnp.asarray(plan.edge_dst_label)
+    eel = jnp.asarray(plan.edge_edge_label)
+    window = plan.window
+
+    def tick(state: EngineState, batch: EdgeBatch):
+        return body(state, batch, edge_match_mask(batch, esl, edl, eel), window)
 
     return tick
 

@@ -1,0 +1,260 @@
+"""Multi-query continuous search: one stream, many standing queries.
+
+The paper evaluates one timing-constrained query against the stream; a
+serving system holds *millions* of standing queries against the same
+edges (cf. the multi-query framing of "Large-scale continuous subgraph
+queries on streams" and StreamWorks, PAPERS.md).  Re-running the stream
+once per query wastes the part of the work that is identical across
+queries — the per-edge label scan — and pays one dispatch per query per
+batch.  This module fuses N queries into one jit-able tick:
+
+``build_multi_tick(plans)``
+    Heterogeneous fusion.  All queries' label tables are concatenated so
+    one ``edge_match_mask`` call produces a single ``[total_qedges, B]``
+    mask per batch (instead of N separate scans); each query's slice
+    feeds the shared tick body (``repro.core.engine.build_tick_body``).
+    Per-query expansion-list state lives in one ``MultiEngineState``
+    pytree and the tick returns one ``TickResult`` per query, so results
+    are bit-identical to N independent ``build_tick`` runs (oracle
+    cross-checked in tests/test_multi_query.py).
+
+``build_slot_tick(template_plan, n_slots)``
+    Homogeneous padded slots.  Every quantity the tick body closes over
+    is *structural* (expansion-list layouts, REL/TREL matrices,
+    capacities — see ``repro.core.registry.plan_signature``); the only
+    per-query data are the three label arrays and the window span, which
+    become runtime inputs stacked ``[n_slots, ...]``.  The body is
+    ``jax.vmap``-ed over the slot axis, so registering / unregistering a
+    query of an already-seen structure is a pure data update — **no
+    recompilation** — which is what lets ``repro.runtime.service`` serve
+    a changing query population at a fixed compile budget.
+
+Backend note: both ticks accept the same ``backend`` as ``build_tick``
+(``JoinBackend.REF`` / ``PALLAS`` / ``PALLAS_INTERPRET``).  The slot
+tick passes ``window`` as a traced value, which the pure-jnp REF backend
+supports; keep REF (the default) for slot ticks unless the Pallas kernel
+has been validated with traced windows.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import join as J
+from repro.core.engine import (
+    TickResult,
+    build_tick_body,
+    edge_match_mask,
+)
+from repro.core.plan import ExecutionPlan
+from repro.core.state import EdgeBatch, EngineState, init_state
+
+I32 = jnp.int32
+
+
+# --------------------------------------------------------------------- #
+# Heterogeneous fusion: build_multi_tick
+# --------------------------------------------------------------------- #
+class MultiEngineState(NamedTuple):
+    """State for N fused queries: one pytree, jit/donate/shard friendly.
+
+    ``queries`` holds one ``EngineState`` per plan (heterogeneous table
+    shapes); ``active`` is a runtime bool per query — flipping it off
+    stops a query's tables from growing without recompiling the tick.
+    """
+
+    queries: tuple          # tuple[EngineState, ...], parallel to plans
+    active: jnp.ndarray     # bool [n_queries]
+
+
+def init_multi_state(plans: Sequence[ExecutionPlan], active=None) -> MultiEngineState:
+    if active is None:
+        active = jnp.ones((len(plans),), jnp.bool_)
+    return MultiEngineState(
+        queries=tuple(init_state(p) for p in plans),
+        active=jnp.asarray(active, jnp.bool_),
+    )
+
+
+def set_active(mstate: MultiEngineState, qi: int, value: bool) -> MultiEngineState:
+    return mstate._replace(active=mstate.active.at[qi].set(value))
+
+
+def reset_query(mstate: MultiEngineState, plans: Sequence[ExecutionPlan],
+                qi: int) -> MultiEngineState:
+    """Replace query ``qi``'s tables with empty ones (e.g. on re-arm)."""
+    qs = list(mstate.queries)
+    qs[qi] = init_state(plans[qi])
+    return mstate._replace(queries=tuple(qs))
+
+
+def build_multi_tick(
+    plans: Sequence[ExecutionPlan],
+    backend: str = J.JoinBackend.REF,
+    extract_matches: bool = True,
+    max_out: int | None = None,
+):
+    """Fuse ``plans`` into one ``tick(mstate, batch) -> (mstate, results)``.
+
+    ``results`` is a tuple of per-query ``TickResult``s, index-parallel
+    to ``plans``.  The per-edge label-match phase runs ONCE over the
+    concatenated query-edge tables (one ``[total_qedges, B]`` mask);
+    each query's expansion-list phase consumes its slice, multiplied by
+    its ``active`` flag.  Semantics per query are exactly those of
+    ``build_tick(plan)`` — same body, same mask slice.
+    """
+    plans = list(plans)
+    if not plans:
+        raise ValueError("build_multi_tick needs at least one plan")
+    bodies = [
+        build_tick_body(p, backend=backend, extract_matches=extract_matches,
+                        max_out=max_out)
+        for p in plans
+    ]
+    esl = jnp.concatenate([jnp.asarray(p.edge_src_label) for p in plans])
+    edl = jnp.concatenate([jnp.asarray(p.edge_dst_label) for p in plans])
+    eel = jnp.concatenate([jnp.asarray(p.edge_edge_label) for p in plans])
+    offsets = np.cumsum([0] + [p.query.n_edges for p in plans])
+    windows = [p.window for p in plans]
+
+    def tick(mstate: MultiEngineState, batch: EdgeBatch):
+        em_all = edge_match_mask(batch, esl, edl, eel)
+        states, results = [], []
+        for qi, body in enumerate(bodies):
+            # an inactive query sees an all-invalid batch: no appends, no
+            # stats drift (edges processed/discarded), frozen t_now
+            act = mstate.active[qi]
+            b_q = batch._replace(valid=batch.valid & act)
+            em = em_all[offsets[qi]:offsets[qi + 1]] & act
+            s, r = body(mstate.queries[qi], b_q, em, windows[qi])
+            states.append(s)
+            results.append(r)
+        return mstate._replace(queries=tuple(states)), tuple(results)
+
+    return tick
+
+
+# --------------------------------------------------------------------- #
+# Homogeneous padded slots: build_slot_tick
+# --------------------------------------------------------------------- #
+class SlotParams(NamedTuple):
+    """Runtime per-slot query data (everything non-structural)."""
+
+    esl: jnp.ndarray     # int32 [S, n_qedges] query-edge src-vertex labels
+    edl: jnp.ndarray     # int32 [S, n_qedges] dst-vertex labels
+    eel: jnp.ndarray     # int32 [S, n_qedges] edge labels (-1 wildcard)
+    window: jnp.ndarray  # int32 [S] sliding-window span per slot
+    active: jnp.ndarray  # bool  [S]
+
+
+class SlotState(NamedTuple):
+    """State of one padded slot group: stacked engines + slot params."""
+
+    engines: EngineState  # every leaf has a leading [S] slot axis
+    params: SlotParams
+
+
+def stack_states(states: Sequence[EngineState]) -> EngineState:
+    """Stack homogeneous EngineStates along a new leading slot axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def init_slot_state(template_plan: ExecutionPlan, n_slots: int) -> SlotState:
+    nq = template_plan.query.n_edges
+    return SlotState(
+        engines=stack_states([init_state(template_plan)] * n_slots),
+        params=SlotParams(
+            esl=jnp.zeros((n_slots, nq), I32),
+            edl=jnp.zeros((n_slots, nq), I32),
+            eel=jnp.full((n_slots, nq), -1, I32),
+            window=jnp.full((n_slots,), template_plan.window, I32),
+            active=jnp.zeros((n_slots,), jnp.bool_),
+        ),
+    )
+
+
+def write_slot(sstate: SlotState, template_plan: ExecutionPlan, k: int,
+               plan: ExecutionPlan,
+               empty: EngineState | None = None) -> SlotState:
+    """Arm slot ``k`` with ``plan``'s labels/window; reset its tables.
+
+    ``plan`` must share ``template_plan``'s structural signature
+    (``repro.core.registry.plan_signature``) — the caller (service)
+    guarantees this by construction.  Pure data writes: no recompile.
+    Pass a cached ``empty = init_state(template_plan)`` to avoid
+    re-materializing the full-capacity empty tables per churn event.
+    """
+    if empty is None:
+        empty = init_state(template_plan)
+    p = sstate.params
+    return SlotState(
+        engines=jax.tree.map(
+            lambda full, e: full.at[k].set(e),
+            sstate.engines, empty),
+        params=SlotParams(
+            esl=p.esl.at[k].set(jnp.asarray(plan.edge_src_label)),
+            edl=p.edl.at[k].set(jnp.asarray(plan.edge_dst_label)),
+            eel=p.eel.at[k].set(jnp.asarray(plan.edge_edge_label)),
+            window=p.window.at[k].set(plan.window),
+            active=p.active.at[k].set(True),
+        ),
+    )
+
+
+def clear_slot(sstate: SlotState, template_plan: ExecutionPlan, k: int,
+               empty: EngineState | None = None) -> SlotState:
+    """Disarm slot ``k`` (unregister): deactivate + drop its tables."""
+    if empty is None:
+        empty = init_state(template_plan)
+    return SlotState(
+        engines=jax.tree.map(
+            lambda full, e: full.at[k].set(e),
+            sstate.engines, empty),
+        params=sstate.params._replace(
+            active=sstate.params.active.at[k].set(False)),
+    )
+
+
+def read_slot(sstate: SlotState, k: int) -> EngineState:
+    """Unstack slot ``k``'s engine state (host-side result extraction)."""
+    return jax.tree.map(lambda x: x[k], sstate.engines)
+
+
+def build_slot_tick(
+    template_plan: ExecutionPlan,
+    backend: str = J.JoinBackend.REF,
+    extract_matches: bool = True,
+    max_out: int | None = None,
+):
+    """Compile a padded-slot tick for one structural template.
+
+    Returns ``tick(sstate, batch) -> (sstate, results)`` where
+    ``results`` is a ``TickResult`` whose leaves carry a leading slot
+    axis.  The label-match phase evaluates all slots' masks in one shot
+    from the stacked ``[S, n_qedges]`` label arrays; the structural body
+    is vmapped over slots.  Inactive slots process nothing (their mask
+    is zeroed) and their tables stay empty.
+    """
+    body = build_tick_body(template_plan, backend=backend,
+                           extract_matches=extract_matches, max_out=max_out)
+
+    def one(engine, batch, esl, edl, eel, window, active):
+        # unarmed slots see an all-invalid batch (no stats drift, frozen
+        # t_now) in addition to the zeroed match mask
+        b_s = batch._replace(valid=batch.valid & active)
+        em = edge_match_mask(b_s, esl, edl, eel) & active
+        return body(engine, b_s, em, window)
+
+    vbody = jax.vmap(one, in_axes=(0, None, 0, 0, 0, 0, 0))
+
+    def tick(sstate: SlotState, batch: EdgeBatch):
+        p = sstate.params
+        engines, results = vbody(
+            sstate.engines, batch, p.esl, p.edl, p.eel, p.window, p.active)
+        return sstate._replace(engines=engines), results
+
+    return tick

@@ -1,0 +1,112 @@
+"""Standing-query registry + structural plan signatures.
+
+``QueryRegistry`` owns the lifecycle of registered continuous queries:
+qid allocation, compilation (``compile_plan``) with uniform capacities,
+and the *structural signature* used by the service layer to bucket
+queries into padded slot groups (``repro.core.multi.build_slot_tick``).
+
+The signature captures everything ``build_tick_body`` closes over —
+expansion-list level layouts, REL/TREL matrices, capacities, join specs
+— and deliberately EXCLUDES the per-edge label arrays and the window
+span, which are runtime slot data.  Two plans with equal signatures are
+interchangeable under one compiled slot tick.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+from repro.core.plan import ExecutionPlan, compile_plan
+from repro.core.query import QueryGraph
+
+
+def plan_signature(plan: ExecutionPlan) -> tuple:
+    """Hashable structural fingerprint of an ExecutionPlan.
+
+    Includes: per-subquery timing sequences and level specs (matched
+    query edge, slot wiring, layouts, capacities), and per-L0-join REL /
+    TREL matrices, new-vertex slots, layouts, and capacities.  Excludes:
+    vertex/edge *labels* and the window span (runtime slot parameters).
+    """
+    subs = tuple(
+        (
+            s.timing_sequence,
+            tuple(
+                (lv.qedge, lv.src_slot, lv.dst_slot, lv.new_vertices,
+                 lv.vertex_layout, lv.capacity, lv.max_new)
+                for lv in s.levels
+            ),
+        )
+        for s in plan.subqueries
+    )
+    joins = tuple(
+        (js.rel.shape, js.rel.tobytes(), js.trel.shape, js.trel.tobytes(),
+         js.b_new_vertex_slots, js.vertex_layout, js.edge_layout,
+         js.capacity, js.max_new)
+        for js in plan.l0_joins
+    )
+    return (subs, joins)
+
+
+@dataclass
+class RegisteredQuery:
+    """One standing query: its graph, window, compiled plan, signature."""
+
+    qid: int
+    query: QueryGraph
+    window: int
+    plan: ExecutionPlan
+    signature: tuple = field(repr=False)
+
+
+class QueryRegistry:
+    """qid -> compiled standing query, with structural grouping info.
+
+    Capacities are uniform across registered queries (they are part of
+    the structural signature, so differing capacities would fragment the
+    slot groups for no benefit at this layer).
+    """
+
+    def __init__(self, level_capacity: int = 4096, l0_capacity: int = 4096,
+                 max_new: int = 1024):
+        self.level_capacity = level_capacity
+        self.l0_capacity = l0_capacity
+        self.max_new = max_new
+        self._queries: dict[int, RegisteredQuery] = {}
+        self._next_qid = itertools.count()
+
+    # ------------------------------------------------------------------ #
+    def register(self, query: QueryGraph, window: int) -> int:
+        plan = compile_plan(
+            query, window,
+            level_capacity=self.level_capacity,
+            l0_capacity=self.l0_capacity,
+            max_new=self.max_new,
+        )
+        qid = next(self._next_qid)
+        self._queries[qid] = RegisteredQuery(
+            qid=qid, query=query, window=window, plan=plan,
+            signature=plan_signature(plan),
+        )
+        return qid
+
+    def unregister(self, qid: int) -> RegisteredQuery:
+        return self._queries.pop(qid)
+
+    # ------------------------------------------------------------------ #
+    def get(self, qid: int) -> RegisteredQuery:
+        return self._queries[qid]
+
+    def qids(self) -> list[int]:
+        return sorted(self._queries)
+
+    def plans(self) -> list[ExecutionPlan]:
+        """Active plans in qid order — the input to ``build_multi_tick``."""
+        return [self._queries[q].plan for q in self.qids()]
+
+    def __len__(self) -> int:
+        return len(self._queries)
+
+    def __contains__(self, qid: int) -> bool:
+        return qid in self._queries

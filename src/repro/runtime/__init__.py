@@ -1,4 +1,6 @@
-"""Runtime layer: fault tolerance, elastic scaling, straggler mitigation."""
+"""Runtime layer: multi-query serving, fault tolerance, elastic scaling,
+straggler mitigation."""
 
 from repro.runtime.fault import FaultTolerantLoop, SimulatedFailure
+from repro.runtime.service import ContinuousSearchService
 from repro.runtime.straggler import TickCoalescer

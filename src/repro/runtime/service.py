@@ -1,0 +1,213 @@
+"""Continuous-search service: register / unregister / ingest.
+
+The serving front-end for the multi-query engine (repro.core.multi).
+Standing queries arrive and leave while the edge stream flows; the
+service keeps the compile budget fixed by bucketing queries into padded
+slot groups keyed by structural signature:
+
+* ``register(query, window)`` compiles the query's ExecutionPlan (host-
+  side numpy, cheap), looks up its structural signature
+  (``repro.core.registry.plan_signature``), and arms a free slot in an
+  existing group — a pure device-data write, **no XLA recompilation**.
+  Only a never-seen structure (or an overflowing group) triggers one
+  ``build_slot_tick`` compile, which then serves ``slots_per_group``
+  queries of that shape; ``n_compiles`` counts these for observability.
+* ``unregister(qid)`` disarms the slot (again data-only).
+* ``ingest(batch)`` advances every group's fused tick once and returns
+  ``{qid: TickResult}`` for the registered queries.
+
+Batches must keep a fixed shape (pad the tail; ``to_batches`` does) —
+a new batch size re-specializes the jitted ticks, as usual under JAX.
+
+Example
+-------
+    svc = ContinuousSearchService()
+    q1 = svc.register(chain_query, window=50)
+    for b in to_batches(stream, 64):
+        results = svc.ingest(make_batch(**b))
+        if int(results[q1].n_new_matches):
+            ...  # alert
+    svc.unregister(q1)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+
+from repro.core import join as J
+from repro.core.multi import (
+    SlotState,
+    build_slot_tick,
+    clear_slot,
+    init_slot_state,
+    read_slot,
+    write_slot,
+)
+from repro.core.engine import TickResult, current_matches
+from repro.core.plan import ExecutionPlan
+from repro.core.query import QueryGraph
+from repro.core.registry import QueryRegistry
+from repro.core.state import EdgeBatch, EngineState, init_state, make_batch
+
+
+@dataclass(eq=False)       # identity semantics: fields hold device arrays
+class _Group:
+    """One compiled slot tick + its device state and slot ownership."""
+
+    template: ExecutionPlan
+    tick: object                      # jitted slot tick
+    sstate: SlotState
+    empty: EngineState                # cached init_state(template) for churn
+    qids: list = field(default_factory=list)   # qid | None per slot
+
+    def free_slot(self) -> int | None:
+        for k, qid in enumerate(self.qids):
+            if qid is None:
+                return k
+        return None
+
+
+class ContinuousSearchService:
+    """Multi-tenant continuous subgraph search over one edge stream."""
+
+    def __init__(
+        self,
+        slots_per_group: int = 4,
+        level_capacity: int = 2048,
+        l0_capacity: int = 2048,
+        max_new: int = 512,
+        backend: str = J.JoinBackend.REF,
+        extract_matches: bool = True,
+        max_out: int | None = None,
+        jit: bool = True,
+    ):
+        self.slots_per_group = slots_per_group
+        self.backend = backend
+        self.extract_matches = extract_matches
+        self.max_out = max_out
+        self._jit = jit
+        self.registry = QueryRegistry(
+            level_capacity=level_capacity, l0_capacity=l0_capacity,
+            max_new=max_new)
+        self._groups: dict[tuple, list[_Group]] = {}
+        self._location: dict[int, tuple[_Group, int]] = {}
+        self.n_compiles = 0          # build_slot_tick invocations (observability)
+        self.n_edges_ingested = 0
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_active(self) -> int:
+        return len(self._location)
+
+    def _new_group(self, template: ExecutionPlan) -> _Group:
+        tick = build_slot_tick(
+            template, backend=self.backend,
+            extract_matches=self.extract_matches, max_out=self.max_out)
+        if self._jit:
+            tick = jax.jit(tick)
+        self.n_compiles += 1
+        return _Group(
+            template=template,
+            tick=tick,
+            sstate=init_slot_state(template, self.slots_per_group),
+            empty=init_state(template),
+            qids=[None] * self.slots_per_group,
+        )
+
+    # ------------------------------------------------------------------ #
+    def register(self, query: QueryGraph, window: int) -> int:
+        """Add a standing query; returns its qid.
+
+        Recompile-free when a group of the same structural signature has
+        a free slot; otherwise compiles one new group for the signature.
+        """
+        qid = self.registry.register(query, window)
+        rq = self.registry.get(qid)
+        groups = self._groups.setdefault(rq.signature, [])
+        group = next((g for g in groups if g.free_slot() is not None), None)
+        if group is None:
+            group = self._new_group(rq.plan)
+            groups.append(group)
+        k = group.free_slot()
+        group.sstate = write_slot(group.sstate, group.template, k, rq.plan,
+                                  empty=group.empty)
+        group.qids[k] = qid
+        self._location[qid] = (group, k)
+        return qid
+
+    def unregister(self, qid: int) -> None:
+        """Drop a standing query and its partial-match state (data-only).
+
+        A group whose slots all become empty is released, except that one
+        idle group per structural signature is kept warm so a tenant of a
+        recently-seen structure can re-register without recompiling.  Use
+        ``drop_idle_groups()`` to reclaim the warm groups too.
+        """
+        group, k = self._location.pop(qid)
+        group.sstate = clear_slot(group.sstate, group.template, k,
+                                  empty=group.empty)
+        group.qids[k] = None
+        self.registry.unregister(qid)
+        if all(q is None for q in group.qids):
+            rq_sig = next(
+                sig for sig, gs in self._groups.items() if group in gs)
+            siblings = self._groups[rq_sig]
+            n_idle = sum(
+                1 for g in siblings if all(q is None for q in g.qids))
+            if n_idle > 1:
+                siblings.remove(group)
+
+    def drop_idle_groups(self) -> int:
+        """Release all fully-empty slot groups (compiled ticks + device
+        tables); returns how many were dropped.  Re-registering a dropped
+        structure recompiles one group."""
+        dropped = 0
+        for sig in list(self._groups):
+            keep = [g for g in self._groups[sig]
+                    if any(q is not None for q in g.qids)]
+            dropped += len(self._groups[sig]) - len(keep)
+            if keep:
+                self._groups[sig] = keep
+            else:
+                del self._groups[sig]
+        return dropped
+
+    # ------------------------------------------------------------------ #
+    def ingest(self, batch) -> dict[int, TickResult]:
+        """Advance all standing queries by one batch of stream edges.
+
+        ``batch`` is an EdgeBatch or a dict of arrays (``to_batches``
+        output).  Returns a per-qid TickResult (unstacked views of each
+        group's fused result).
+        """
+        if not isinstance(batch, EdgeBatch):
+            batch = make_batch(**batch)
+        out: dict[int, TickResult] = {}
+        for groups in self._groups.values():
+            for g in groups:
+                if all(q is None for q in g.qids):
+                    continue
+                g.sstate, res = g.tick(g.sstate, batch)
+                for k, qid in enumerate(g.qids):
+                    if qid is not None:
+                        out[qid] = jax.tree.map(lambda x, k=k: x[k], res)
+        # count on host: batch.valid is a concrete input array, so this
+        # adds no sync point against the async tick dispatches above
+        self.n_edges_ingested += int(np.asarray(batch.valid).sum())
+        return out
+
+    # ------------------------------------------------------------------ #
+    def state(self, qid: int) -> EngineState:
+        """This query's (unstacked) engine state."""
+        group, k = self._location[qid]
+        return read_slot(group.sstate, k)
+
+    def matches(self, qid: int):
+        """All complete matches currently in the query's window."""
+        return current_matches(self.registry.get(qid).plan, self.state(qid))
+
+    def stats(self, qid: int):
+        return self.state(qid).stats

@@ -8,6 +8,9 @@
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -1,0 +1,216 @@
+"""Multi-query engine vs per-query oracle: N queries fused into one tick
+(build_multi_tick / the service's padded slot groups) must report exactly
+the same matches as N independent build_tick runs over the same stream.
+Reuses the stream/query harness of tests/test_engine_oracle.py."""
+
+import jax
+import pytest
+
+from repro.core import compile_plan
+from repro.core.engine import build_tick, current_matches
+from repro.core.multi import (
+    build_multi_tick,
+    init_multi_state,
+    set_active,
+)
+from repro.core.oracle import OracleEngine
+from repro.core.query import QueryGraph
+from repro.core.registry import plan_signature
+from repro.core.state import init_state, make_batch
+from repro.runtime.service import ContinuousSearchService
+from repro.stream.generator import to_batches
+
+from test_engine_oracle import small_stream, star_query, tri_query, two_chain_query
+
+CAP = dict(level_capacity=1024, l0_capacity=1024, max_new=512)
+
+
+def chain_query():
+    return QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2)), prec=frozenset({(0, 1)}))
+
+
+def chain_query_relabeled():
+    """Same structure/timing as chain_query, different vertex labels."""
+    return QueryGraph(3, (1, 2, 0), ((0, 1), (1, 2)), prec=frozenset({(0, 1)}))
+
+
+def _queries_and_windows():
+    return (
+        [chain_query(), tri_query(), star_query(), two_chain_query()],
+        [20, 25, 15, 20],
+    )
+
+
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("batch_size", [1, 8])
+def test_multi_tick_equals_independent_ticks(batch_size):
+    """N>=3 fused queries == N independent single-query engines, per tick."""
+    queries, windows = _queries_and_windows()
+    stream = small_stream(150, n_vertices=9, seed=21)
+    plans = [compile_plan(q, w, **CAP) for q, w in zip(queries, windows)]
+
+    mtick = jax.jit(build_multi_tick(plans))
+    mstate = init_multi_state(plans)
+    sticks = [jax.jit(build_tick(p)) for p in plans]
+    sstates = [init_state(p) for p in plans]
+
+    for b in to_batches(stream, batch_size):
+        batch = make_batch(**b)
+        mstate, results = mtick(mstate, batch)
+        for i, p in enumerate(plans):
+            sstates[i], r1 = sticks[i](sstates[i], batch)
+            assert int(results[i].n_new_matches) == int(r1.n_new_matches)
+            assert int(results[i].n_overflow) == 0
+
+    for i, p in enumerate(plans):
+        assert current_matches(p, mstate.queries[i]) == \
+            current_matches(p, sstates[i])
+        assert int(mstate.queries[i].stats.n_matches_total) == \
+            int(sstates[i].stats.n_matches_total)
+
+
+def test_multi_tick_matches_bruteforce_oracle():
+    """Fused tick vs the exact pure-Python oracle, per query."""
+    queries, windows = _queries_and_windows()
+    stream = small_stream(120, n_vertices=8, seed=22)
+    plans = [compile_plan(q, w, **CAP) for q, w in zip(queries, windows)]
+    mtick = jax.jit(build_multi_tick(plans))
+    mstate = init_multi_state(plans)
+    oracles = [OracleEngine(q, w) for q, w in zip(queries, windows)]
+    for b in to_batches(stream, 8):
+        mstate, _ = mtick(mstate, make_batch(**b))
+    for e in stream:
+        for o in oracles:
+            o.insert(e)
+    for i, p in enumerate(plans):
+        assert current_matches(p, mstate.queries[i]) == oracles[i].matches()
+
+
+def test_multi_tick_active_flag_freezes_query():
+    """Deactivating a query stops its tables from growing; others proceed."""
+    queries, windows = _queries_and_windows()
+    stream = small_stream(100, n_vertices=8, seed=23)
+    plans = [compile_plan(q, w, **CAP) for q, w in zip(queries, windows)]
+    mtick = jax.jit(build_multi_tick(plans))
+    mstate = init_multi_state(plans)
+    batches = [make_batch(**b) for b in to_batches(stream, 8)]
+    half = len(batches) // 2
+    for b in batches[:half]:
+        mstate, _ = mtick(mstate, b)
+    mstate = set_active(mstate, 0, False)
+    frozen = int(mstate.queries[0].stats.n_matches_total)
+    frozen_stats = jax.device_get(mstate.queries[0].stats)
+    got_other = 0
+    for b in batches[half:]:
+        mstate, results = mtick(mstate, b)
+        assert int(results[0].n_new_matches) == 0
+        got_other += int(results[1].n_new_matches)
+    assert int(mstate.queries[0].stats.n_matches_total) == frozen
+    # stats don't drift while paused (edges neither processed nor discarded)
+    assert jax.device_get(mstate.queries[0].stats) == frozen_stats
+    # sanity: the still-active queries kept processing the stream
+    assert int(mstate.queries[1].stats.n_edges_processed) == len(stream)
+
+
+# --------------------------------------------------------------------- #
+def test_service_add_remove_mid_stream():
+    """Registry add/remove mid-stream: every query's matches equal a
+    dedicated single-query engine fed exactly the batches the query was
+    registered for."""
+    stream = small_stream(160, n_vertices=9, seed=24)
+    batches = list(to_batches(stream, 8))
+    half = len(batches) // 2
+
+    svc = ContinuousSearchService(slots_per_group=2, **CAP)
+    q1 = svc.register(chain_query(), window=20)
+    q2 = svc.register(tri_query(), window=25)
+    for b in batches[:half]:
+        res = svc.ingest(b)
+        assert set(res) == {q1, q2}
+    svc.unregister(q2)
+    q3 = svc.register(chain_query_relabeled(), window=30)
+    for b in batches[half:]:
+        res = svc.ingest(b)
+        assert set(res) == {q1, q3}
+    assert q2 not in svc.registry
+
+    # q1: full stream reference
+    p1 = compile_plan(chain_query(), 20, **CAP)
+    t1, s1 = jax.jit(build_tick(p1)), init_state(p1)
+    for b in batches:
+        s1, _ = t1(s1, make_batch(**b))
+    assert svc.matches(q1) == current_matches(p1, s1)
+
+    # q3: registered at the midpoint == fresh engine over the suffix
+    p3 = compile_plan(chain_query_relabeled(), 30, **CAP)
+    t3, s3 = jax.jit(build_tick(p3)), init_state(p3)
+    for b in batches[half:]:
+        s3, _ = t3(s3, make_batch(**b))
+    assert svc.matches(q3) == current_matches(p3, s3)
+
+
+def test_service_same_structure_does_not_recompile():
+    """Padded slots: a second query of an already-seen structural
+    signature is a pure data write — no new build_slot_tick compile."""
+    svc = ContinuousSearchService(slots_per_group=4, **CAP)
+    qa = svc.register(chain_query(), window=20)
+    assert svc.n_compiles == 1
+    qb = svc.register(chain_query_relabeled(), window=35)
+    assert svc.n_compiles == 1          # same structure: slot reuse
+    qc = svc.register(star_query(), window=15)
+    assert svc.n_compiles == 2          # new structure: one new group
+    # group overflow falls back to one more compile of the same template
+    for _ in range(4):
+        svc.register(chain_query(), window=20)
+    assert svc.n_compiles == 3
+    assert svc.n_active == 7
+
+    # slots are reusable after unregister, again without compiling
+    svc.unregister(qb)
+    svc.register(chain_query_relabeled(), window=35)
+    assert svc.n_compiles == 3
+
+    p_chain = compile_plan(chain_query(), 20, **CAP)
+    p_rel = compile_plan(chain_query_relabeled(), 35, **CAP)
+    assert plan_signature(p_chain) == plan_signature(p_rel)
+
+
+def test_service_idle_group_retention():
+    """Fully-empty groups are released, keeping one warm per signature
+    so recent structures re-register without compiling."""
+    svc = ContinuousSearchService(slots_per_group=1, **CAP)
+    a = svc.register(chain_query(), window=20)
+    b = svc.register(chain_query(), window=20)   # same sig, second group
+    assert svc.n_compiles == 2
+    svc.unregister(a)                            # first idle group: kept warm
+    svc.unregister(b)                            # second idle group: released
+    c = svc.register(chain_query(), window=20)
+    assert svc.n_compiles == 2                   # warm group reused
+    svc.unregister(c)
+    assert svc.drop_idle_groups() == 1
+    svc.register(chain_query(), window=20)
+    assert svc.n_compiles == 3                   # dropped -> one recompile
+
+
+def test_service_results_match_single_engines():
+    """Service ingest results (per-tick counts and final window matches)
+    equal dedicated per-query engines."""
+    stream = small_stream(120, n_vertices=8, seed=25)
+    queries = [chain_query(), chain_query_relabeled(), star_query()]
+    windows = [20, 30, 15]
+
+    svc = ContinuousSearchService(slots_per_group=2, **CAP)
+    qids = [svc.register(q, w) for q, w in zip(queries, windows)]
+    plans = [compile_plan(q, w, **CAP) for q, w in zip(queries, windows)]
+    ticks = [jax.jit(build_tick(p)) for p in plans]
+    states = [init_state(p) for p in plans]
+
+    for b in to_batches(stream, 8):
+        res = svc.ingest(b)
+        batch = make_batch(**b)
+        for i, qid in enumerate(qids):
+            states[i], r1 = ticks[i](states[i], batch)
+            assert int(res[qid].n_new_matches) == int(r1.n_new_matches)
+    for i, qid in enumerate(qids):
+        assert svc.matches(qid) == current_matches(plans[i], states[i])
+        assert int(svc.stats(qid).n_overflow) == 0
