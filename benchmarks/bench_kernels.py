@@ -1,9 +1,23 @@
-"""Kernel-layer microbenchmarks: compat_join reference-backend throughput
-across table sizes (the CPU-measurable proxy; the Pallas kernel itself is
-exercised via interpret-mode tests and the dry-run cost model)."""
+"""Kernel-layer microbenchmarks for the compat_join hot path.
+
+Two products:
+
+* ``compat_join_scaling`` — the historical REF-backend CSV
+  (benchmarks/results/).
+* ``bench_join_json`` — the machine-readable ``BENCH_join.json`` at the
+  repo root tracking the perf trajectory across PRs: backend × shape ×
+  slot-count timings (REF vs PALLAS_INTERPRET vs PALLAS when a TPU is
+  attached) plus the fused ``compat_join_pairs`` vs mask+nonzero
+  comparison.  Compiled-PALLAS wall time can only be measured on TPU;
+  on CPU the fused path is scored in interpret-comparable terms — the
+  bytes-moved model (the fused kernel never materializes the [CA, CB]
+  mask in HBM) alongside same-backend interpret timings.
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -11,7 +25,212 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import write_csv
-from repro.core.join import compat_mask_ref
+from repro.core.join import compat_mask_ref, extract_pairs
+from repro.kernels.compat_join import ops as cj_ops
+
+# repo root = parent of this file's directory
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_join.json")
+
+NV, NE = 4, 2          # A-side slot widths used throughout
+NVB, NEB = 2, 1        # B-side (stream-edge shaped)
+
+
+def _case(rng, ca, cb, window=200, density_scale=1):
+    """Random join inputs shaped like a level join (A table vs batch)."""
+    hi = max(int(np.sqrt(ca * cb) * density_scale), 8)
+    ba = jnp.asarray(rng.integers(0, hi, (ca, NV)), jnp.int32)
+    ea = jnp.asarray(rng.integers(0, 500, (ca, NE)), jnp.int32)
+    va = jnp.asarray(rng.random(ca) < 0.7)
+    bb = jnp.asarray(rng.integers(0, hi, (cb, NVB)), jnp.int32)
+    eb = jnp.asarray(rng.integers(0, 500, (cb, NEB)), jnp.int32)
+    vb = jnp.asarray(rng.random(cb) < 0.9)
+    rel = rng.random((NV, NVB)) < 0.3
+    trel = np.zeros((NE, NEB), np.int8)
+    trel[-1, 0] = -1
+    return (ba, ea, va, bb, eb, vb), rel, trel, window
+
+
+def _time_call(f, args, iters):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us/call
+
+
+def _bytes_model(ca, cb, max_new):
+    """HBM bytes moved per join under each pair-extraction path.
+
+    Inputs are int32 tables + validity; the mask path writes the int8
+    [CA, CB] mask and immediately re-reads it for ``jnp.nonzero``; the
+    fused kernel writes only the compacted pairs + count.
+    """
+    in_b = 4 * (ca * (NV + NE) + cb * (NVB + NEB) + ca + cb)
+    pair_out = 2 * max_new * 4 + 4
+    return {
+        "input_bytes": in_b,
+        "mask_path_bytes": in_b + 2 * ca * cb + pair_out,
+        "fused_path_bytes": in_b + pair_out,
+    }
+
+
+def _mask_fn(backend, rel, trel, window):
+    if backend == "ref":
+        return jax.jit(
+            lambda *a: compat_mask_ref(*a, rel, trel, window))
+    return jax.jit(lambda *a: cj_ops.compat_mask(
+        *a, rel, trel, window, interpret=(backend == "pallas_interpret")))
+
+
+def _pairs_fused_fn(backend, rel, trel, window, max_new):
+    return jax.jit(lambda *a: cj_ops.compat_join_pairs(
+        *a, rel, trel, max_new, window,
+        interpret=(backend == "pallas_interpret")))
+
+
+def _pairs_masknz_fn(backend, rel, trel, window, max_new):
+    mask = _mask_fn(backend, rel, trel, window)
+    return jax.jit(lambda *a: extract_pairs(mask(*a), max_new))
+
+
+def _backends():
+    bs = ["ref", "pallas_interpret"]
+    if jax.default_backend() == "tpu":
+        bs.append("pallas")
+    return bs
+
+
+def mask_backend_sweep(shapes, iters):
+    """compat_mask timings per backend per shape."""
+    rng = np.random.default_rng(0)
+    rows = []
+    for ca, cb in shapes:
+        args, rel, trel, window = _case(rng, ca, cb)
+        for backend in _backends():
+            us = _time_call(_mask_fn(backend, rel, trel, window),
+                            args, iters)
+            rows.append({
+                "bench": "compat_mask", "backend": backend,
+                "ca": ca, "cb": cb, "n_slots": 1,
+                "us_per_call": round(us, 1),
+                "pairs_per_sec": round(ca * cb / (us * 1e-6), 1),
+            })
+    return rows
+
+
+def slot_group_sweep(shapes, slot_counts, iters):
+    """Vmapped slot-group joins: per-slot traced windows, one stacked
+    3-D-grid pallas_call under the PALLAS backends."""
+    rng = np.random.default_rng(1)
+    rows = []
+    for ca, cb in shapes:
+        args, rel, trel, _ = _case(rng, ca, cb)
+        ba, ea, va, bb, eb, vb = args
+        for n_slots in slot_counts:
+            bas = jnp.stack([ba] * n_slots)
+            ws = jnp.asarray(
+                rng.integers(100, 300, (n_slots,)), jnp.int32)
+            for backend in _backends():
+                if backend == "ref":
+                    one = lambda xa, w: compat_mask_ref(
+                        xa, ea, va, bb, eb, vb, rel, trel, w)
+                else:
+                    interp = backend == "pallas_interpret"
+                    one = lambda xa, w: cj_ops.compat_mask(
+                        xa, ea, va, bb, eb, vb, rel, trel, w,
+                        interpret=interp)
+                f = jax.jit(jax.vmap(one, in_axes=(0, 0)))
+                us = _time_call(f, (bas, ws), iters)
+                rows.append({
+                    "bench": "slot_group_mask", "backend": backend,
+                    "ca": ca, "cb": cb, "n_slots": n_slots,
+                    "us_per_call": round(us, 1),
+                    "us_per_slot": round(us / n_slots, 1),
+                })
+    return rows
+
+
+def pairs_vs_mask(shapes, max_new, iters):
+    """Fused compat_join_pairs vs the mask+nonzero two-step, per backend,
+    with the bytes-moved model (the interpret-comparable score)."""
+    rng = np.random.default_rng(2)
+    rows = []
+    for ca, cb in shapes:
+        args, rel, trel, window = _case(rng, ca, cb)
+        model = _bytes_model(ca, cb, max_new)
+        for backend in _backends():
+            us_mask = _time_call(
+                _pairs_masknz_fn(backend, rel, trel, window, max_new),
+                args, iters)
+            row = {
+                "bench": "pairs_vs_mask", "backend": backend,
+                "ca": ca, "cb": cb, "max_new": max_new,
+                "us_mask_nonzero": round(us_mask, 1),
+                **model,
+                "fused_bytes_fraction": round(
+                    model["fused_path_bytes"] / model["mask_path_bytes"], 4),
+                "fused_wins_bytes":
+                    model["fused_path_bytes"] < model["mask_path_bytes"],
+            }
+            if backend != "ref":      # the fused kernel IS the pallas path
+                us_fused = _time_call(
+                    _pairs_fused_fn(backend, rel, trel, window, max_new),
+                    args, iters)
+                row["us_fused"] = round(us_fused, 1)
+                row["fused_speedup_measured"] = round(us_mask / us_fused, 3)
+            rows.append(row)
+    return rows
+
+
+def bench_join_json(reduced: bool = True, dry: bool = False) -> str:
+    """Assemble and write ``BENCH_join.json`` at the repo root."""
+    if dry:
+        mask_shapes = [(128, 64)]
+        pair_shapes = [(128, 128), (1024, 1024)]
+        slot_counts = [2]
+        iters = 2
+    elif reduced:
+        mask_shapes = [(1024, 64), (1024, 1024), (4096, 64)]
+        pair_shapes = [(256, 256), (1024, 1024)]
+        slot_counts = [1, 4]
+        iters = 5
+    else:
+        mask_shapes = [(1024, 64), (4096, 256), (4096, 4096)]
+        pair_shapes = [(1024, 1024), (4096, 1024)]
+        slot_counts = [1, 4, 16]
+        iters = 10
+
+    results = []
+    results += mask_backend_sweep(mask_shapes, iters)
+    results += slot_group_sweep(mask_shapes[:1] if dry else mask_shapes[:2],
+                                slot_counts, iters)
+    results += pairs_vs_mask(pair_shapes, max_new=256, iters=iters)
+
+    doc = {
+        "schema": "bench_join/v1",
+        "mode": "dry" if dry else ("reduced" if reduced else "full"),
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "note": ("'pallas' rows appear only when a TPU is attached; on "
+                 "CPU the compiled path is scored by the bytes-moved "
+                 "model plus PALLAS_INTERPRET timings."),
+        "results": results,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# BENCH_join.json -> {JSON_PATH} ({len(results)} rows)")
+    for r in results:
+        if r["bench"] == "pairs_vs_mask":
+            print(f"#   pairs_vs_mask {r['backend']} ca={r['ca']} "
+                  f"cb={r['cb']}: bytes {r['fused_path_bytes']} vs "
+                  f"{r['mask_path_bytes']} "
+                  f"(x{r['fused_bytes_fraction']}), "
+                  f"us {r.get('us_fused', '-')} vs {r['us_mask_nonzero']}")
+    return JSON_PATH
 
 
 def compat_join_scaling(reduced=True):

@@ -1,7 +1,15 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
-``python -m benchmarks.run [--full]`` — reduced scales by default (CPU
-CI); CSV per figure goes to stdout and benchmarks/results/.
+``python -m benchmarks.run [--full|--dry]`` — reduced scales by default
+(CPU CI); CSV per figure goes to stdout and benchmarks/results/, and the
+kernel-join trajectory goes to ``BENCH_join.json`` at the repo root
+(machine-readable: backend × shape × slot-count timings plus the fused
+compat_join_pairs vs mask+nonzero bytes model — see
+``benchmarks.bench_kernels.bench_join_json``).
+
+``--dry`` is the CI smoke mode: tiny shapes, only the join benches, but
+the same ``BENCH_join.json`` schema, so the emission path can't rot.
+
 The roofline/dry-run tables (EXPERIMENTS.md §Dry-run/§Roofline) are
 produced separately by ``python -m repro.launch.dryrun --all`` and
 summarized by ``python -m benchmarks.report_dryrun``.
@@ -19,10 +27,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="larger scales (slower)")
+    ap.add_argument("--dry", action="store_true",
+                    help="smoke mode: tiny shapes, join benches + "
+                         "BENCH_join.json only")
     args = ap.parse_args()
     reduced = not args.full
 
     t0 = time.time()
+    if args.dry:
+        bench_kernels.bench_join_json(reduced=True, dry=True)
+        print(f"# total bench wall time: {time.time() - t0:.1f}s")
+        return
+
     bench_engine.throughput_vs_window(reduced)        # Fig 14
     bench_engine.throughput_vs_query_size(reduced)    # Fig 15
     bench_engine.space_vs_window(reduced)             # Figs 16-17
@@ -31,6 +47,7 @@ def main() -> None:
     bench_engine.selectivity(reduced)                 # Fig 21
     bench_engine.rescan_baseline(reduced)             # Fan-et-al regime
     bench_kernels.compat_join_scaling(reduced)
+    bench_kernels.bench_join_json(reduced=reduced)    # BENCH_join.json
     bench_multiquery.main(                            # multi-tenant serving
         n_queries=6 if reduced else 12,
         n_edges=3000 if reduced else 20000)

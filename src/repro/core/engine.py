@@ -265,12 +265,11 @@ def build_tick_body(
                     n_overflow += nd
                 else:
                     prev = sub_recons[li - 1]
-                    mask = J.compat_mask(
+                    a_idx, b_idx, pv, nd1 = J.join_pairs(
                         prev.bind, prev.ets, prev.valid,
                         bbind, bets, em,
                         level_rel[(si, li)], _trel_chain(prev.ets.shape[1]),
-                        window, backend)
-                    a_idx, b_idx, pv, nd1 = J.extract_pairs(mask, lv.max_new)
+                        lv.max_new, window, backend)
                     t, nd2 = _append_level(
                         sub[li], a_idx,
                         jnp.take(batch.src, b_idx, mode="clip"),
@@ -315,11 +314,10 @@ def build_tick_body(
                 da = _View(*(
                     jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
                     for x in da))
-            m1 = J.compat_mask(
+            a1, b1, pv1, nd1 = J.join_pairs(
                 da.bind, da.ets, da.valid,
                 b_view.bind, b_view.ets, b_view.valid,
-                js.rel, js.trel, window, backend)
-            a1, b1, pv1, nd1 = J.extract_pairs(m1, d)
+                js.rel, js.trel, d, window, backend)
             nb = jnp.take(b_view.bind, b1, axis=0, mode="clip")
             out_bind1 = jnp.concatenate(
                 [jnp.take(da.bind, a1, axis=0, mode="clip")]
@@ -337,11 +335,10 @@ def build_tick_body(
                 db = _View(*(
                     jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
                     for x in db))
-            m2 = J.compat_mask(
+            a2, b2, pv2, nd4 = J.join_pairs(
                 a_view.bind, a_view.ets, a_view.valid & ~a_view.fresh,
                 db.bind, db.ets, db.valid,
-                js.rel, js.trel, window, backend)
-            a2, b2, pv2, nd4 = J.extract_pairs(m2, d)
+                js.rel, js.trel, d, window, backend)
             nb2 = jnp.take(db.bind, b2, axis=0, mode="clip")
             out_bind2 = jnp.concatenate(
                 [jnp.take(a_view.bind, a2, axis=0, mode="clip")]

@@ -94,6 +94,32 @@ def compat_mask(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel,
         interpret=(backend == JoinBackend.PALLAS_INTERPRET))
 
 
+def join_pairs(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel,
+               max_new: int, window: int | None = None,
+               backend: str = JoinBackend.REF):
+    """Fused compatibility join + pair extraction (the engine's hot path).
+
+    Returns ``(a_idx, b_idx, pair_valid, n_dropped)`` — the contract of
+    ``extract_pairs`` applied to the join mask.  Under the REF backend
+    this *is* ``compat_mask_ref`` + ``extract_pairs`` (bit-identical to
+    the historical two-step path).  Under the Pallas backends it lowers
+    to the fused ``compat_join_pairs`` kernel, which extracts compacted
+    pairs on-chip and never materializes the [CA, CB] mask in HBM; the
+    kernel emits pairs in tile order, so cross-backend equality is on
+    the pair SET (and the exact ``n_dropped``), with a backend-defined
+    keep-subset in the overflow case.
+    """
+    if backend == JoinBackend.REF:
+        mask = compat_mask_ref(
+            bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel, window)
+        return extract_pairs(mask, max_new)
+    from repro.kernels.compat_join import ops as cj_ops
+    return cj_ops.compat_join_pairs(
+        bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel,
+        max_new, window=window,
+        interpret=(backend == JoinBackend.PALLAS_INTERPRET))
+
+
 # --------------------------------------------------------------------- #
 # Mask -> (a_idx, b_idx) pair extraction and free-slot allocation.
 # --------------------------------------------------------------------- #

@@ -30,10 +30,18 @@ batch.  This module fuses N queries into one jit-able tick:
     a changing query population at a fixed compile budget.
 
 Backend note: both ticks accept the same ``backend`` as ``build_tick``
-(``JoinBackend.REF`` / ``PALLAS`` / ``PALLAS_INTERPRET``).  The slot
-tick passes ``window`` as a traced value, which the pure-jnp REF backend
-supports; keep REF (the default) for slot ticks unless the Pallas kernel
-has been validated with traced windows.
+(``JoinBackend.REF`` / ``PALLAS`` / ``PALLAS_INTERPRET``), and ALL
+variants — including the slot tick's traced per-slot windows — are
+served by every backend.  The Pallas kernels take ``window`` as a
+scalar-prefetch input (not a specialization constant), and the vmapped
+slot-group joins batch into ONE stacked 3-D-grid ``pallas_call`` per
+join (slot, A-tile, B-tile) via the custom-vmap rule in
+``repro.kernels.compat_join.ops`` — no per-slot dispatch, and
+registering a query never recompiles.  Parity with REF is enforced by
+tests/test_slot_tick_pallas.py in interpret mode (CI is CPU-only);
+the compiled ``PALLAS`` path — in particular the fused pair-emission
+loop — has not yet been validated on real TPU hardware (see
+ROADMAP.md), so prefer ``PALLAS_INTERPRET``/``REF`` until it has.
 """
 
 from __future__ import annotations

@@ -1,1 +1,5 @@
-from repro.kernels.compat_join.ops import compat_mask
+from repro.kernels.compat_join.ops import (
+    compat_join_pairs,
+    compat_mask,
+    normalize_spec,
+)

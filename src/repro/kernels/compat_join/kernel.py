@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the compatibility join (paper Definitions 7/8).
+"""Pallas TPU kernels for the compatibility join (paper Definitions 7/8).
 
 The join predicate between a partial-match row ``a`` and a candidate row
 ``b`` is a conjunction over a *static* spec:
@@ -13,115 +13,451 @@ TPU mapping
 -----------
 This is VPU (vector-unit) integer work, not MXU work: the arithmetic
 intensity comes from the CA×CB blow-up, while the inputs are narrow
-int32 tables.  The kernel tiles the output [CA, CB] into (TA, TB) VMEM
-blocks; each grid step loads a [TA, nv+ne] strip of A and a [TB, nv+ne]
-strip of B (a few KB each), performs all slot-pair compares in
-registers, and writes one int8 [TA, TB] block.  HBM traffic is therefore
-O(CA·nv + CB·nv + CA·CB/1) bytes instead of the O(CA·CB·nv) a naive
-broadcast materializes — same insight FlashAttention applies to softmax
-attention, applied to the paper's join.
+int32 tables.  The kernels tile the [CA, CB] pair space into (TA, TB)
+VMEM blocks; each grid step loads a [TA, nv+ne] strip of A and a
+[TB, nv+ne] strip of B (a few KB each) and performs all slot-pair
+compares in registers.  HBM traffic is therefore O(CA·nv + CB·nv +
+outputs) bytes instead of the O(CA·CB·nv) a naive broadcast
+materializes — the FlashAttention insight applied to the paper's join.
 
-The REL/TREL specs are baked in as Python constants (kernel
-specialization), so slot-pair loops fully unroll with zero control flow.
+Dispatch rules (what runs where)
+--------------------------------
+Static kernel-specialization constants are ONLY the REL/TREL spec
+matrices (tiny nested tuples — slot-pair loops fully unroll with zero
+control flow), the tile sizes, and whether a window predicate exists.
+Everything else is runtime data:
+
+  * ``window`` is a traced scalar-prefetch input
+    (``pltpu.PrefetchScalarGridSpec``), so per-slot runtime windows —
+    as produced by ``repro.core.multi.build_slot_tick`` — never force a
+    recompile and never fragment the jit cache.
+  * Batched (vmapped) slot-group joins lower to ONE stacked
+    ``pallas_call`` over a 3-D grid ``(slot, A-tile, B-tile)`` with
+    ``[n_slots, C, nv]`` inputs; see the custom-vmap rule in ``ops.py``.
+  * ``compat_mask_kernel``   -> int8 [CA, CB] compatibility mask.
+  * ``compat_join_pairs_kernel`` -> fused mask + on-chip pair
+    extraction: compacted ``(a_idx, b_idx)`` pairs plus the total match
+    count, with NO [CA, CB] mask ever written to HBM.  A running SMEM
+    counter carries the output cursor across the (sequential) grid
+    steps; each tile emits its matches with a short dynamic-trip
+    ``fori_loop`` (first-set-bit via a masked min over an on-tile
+    linear iota).  Pairs are emitted in tile order, so callers get set
+    semantics: the same pairs as mask+nonzero, exactly equal
+    ``n_dropped``, but an unspecified keep-subset on overflow.
+
+Tiling rules
+------------
+``choose_tiles(ca, cb)`` picks (TA, TB) adaptively: TA rounds CA up to
+the int32 sublane (8) and TB rounds CB up to the lane width (128), both
+capped at 256.  A 64-row delta join therefore runs as one 64×128 tile
+instead of a padded 256×256 one (≈ 8× less wasted work on the common
+small-delta case) while large tables still get the bandwidth-friendly
+256×256 blocks, keeping the live blocks ((TA,K)+(TB,K)+(TA,TB)) well
+under 1 MB of VMEM.
 """
 
 from __future__ import annotations
 
 import functools
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-
-# VMEM tile sizes: (8, 128) is the fp32/int32 VREG tile on TPU; we use
-# multiples that keep the three live blocks ((TA,K)+(TB,K)+(TA,TB)) well
-# under 1 MB of VMEM while amortizing grid overhead.
+# Upper bounds for the adaptive tiles: (8, 128) is the int32 VREG tile
+# on TPU; 256×256 keeps the three live blocks well under 1 MB of VMEM
+# while amortizing grid overhead on large tables.
 TILE_A = 256
 TILE_B = 256
 
+_SUBLANE = 8   # int32 second-to-last dim granularity
+_LANE = 128    # last dim granularity
 
-def _kernel_body(
-    bind_a_ref, ets_a_ref, valid_a_ref,
-    bind_b_ref, ets_b_ref, valid_b_ref,
-    out_ref,
-    *, rel, trel, window,
-):
-    va = valid_a_ref[...]                    # int32 [TA]
-    vb = valid_b_ref[...]                    # int32 [TB]
-    m = (va[:, None] > 0) & (vb[None, :] > 0)  # bool [TA, TB]
 
-    nva, nvb = rel.shape
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def choose_tiles(ca: int, cb: int) -> tuple[int, int]:
+    """Adaptive (TILE_A, TILE_B) from the actual table shapes.
+
+    Rounds to hardware granularity ((8, 128) for int32) and caps at
+    (TILE_A, TILE_B) so small deltas aren't padded up to a full
+    256×256 tile.
+    """
+    ta = min(TILE_A, _ceil_to(max(ca, 1), _SUBLANE))
+    tb = min(TILE_B, _ceil_to(max(cb, 1), _LANE))
+    return ta, tb
+
+
+def _tile_mask(ba, ea, va, bb, eb, vb, w, *, rel, trel):
+    """The join predicate over one (TA, TB) tile, on register values.
+
+    ``rel``/``trel`` are static nested tuples -> the loops fully unroll.
+    ``w`` is a traced scalar (window span) or None (no window predicate).
+    """
+    m = (va[:, None] > 0) & (vb[None, :] > 0)    # bool [TA, TB]
+
+    nva, nvb = len(rel), len(rel[0]) if rel else 0
     for i in range(nva):
-        ai = bind_a_ref[:, i][:, None]       # [TA, 1]
+        ai = ba[:, i][:, None]                   # [TA, 1]
         for j in range(nvb):
-            bj = bind_b_ref[:, j][None, :]   # [1, TB]
-            if rel[i, j]:
+            bj = bb[:, j][None, :]               # [1, TB]
+            if rel[i][j]:
                 m = m & (ai == bj)
             else:
                 m = m & (ai != bj)
 
-    nea, neb = trel.shape
+    nea, neb = len(trel), len(trel[0]) if trel else 0
     for i in range(nea):
-        ti = ets_a_ref[:, i][:, None]
+        ti = ea[:, i][:, None]
         for j in range(neb):
-            if trel[i, j] == -1:
-                m = m & (ti < ets_b_ref[:, j][None, :])
-            elif trel[i, j] == 1:
-                m = m & (ti > ets_b_ref[:, j][None, :])
+            if trel[i][j] == -1:
+                m = m & (ti < eb[:, j][None, :])
+            elif trel[i][j] == 1:
+                m = m & (ti > eb[:, j][None, :])
 
-    if window is not None:
-        min_a = ets_a_ref[:, 0][:, None]
-        max_a = ets_a_ref[:, 0][:, None]
-        for i in range(1, nea):
-            ti = ets_a_ref[:, i][:, None]
+    if w is not None:
+        min_a = ea[:, 0][:, None]
+        max_a = ea[:, 0][:, None]
+        for i in range(1, ea.shape[1]):
+            ti = ea[:, i][:, None]
             min_a = jnp.minimum(min_a, ti)
             max_a = jnp.maximum(max_a, ti)
-        min_b = ets_b_ref[:, 0][None, :]
-        max_b = ets_b_ref[:, 0][None, :]
-        for j in range(1, neb):
-            tj = ets_b_ref[:, j][None, :]
+        min_b = eb[:, 0][None, :]
+        max_b = eb[:, 0][None, :]
+        for j in range(1, eb.shape[1]):
+            tj = eb[:, j][None, :]
             min_b = jnp.minimum(min_b, tj)
             max_b = jnp.maximum(max_b, tj)
         span = jnp.maximum(max_a, max_b) - jnp.minimum(min_a, min_b)
-        m = m & (span < window)
+        m = m & (span < w)
+    return m
 
-    out_ref[...] = m.astype(jnp.int8)
+
+# --------------------------------------------------------------------- #
+# Compatibility mask kernels (int8 [CA, CB] output).
+#
+# ``batched`` in the stacked (3-D grid) kernels is a per-input tuple of
+# six bools (bind_a, ets_a, valid_a, bind_b, ets_b, valid_b): inputs
+# shared across slots — e.g. the slot tick's stream-edge operand — stay
+# 2-D and are read once via an index_map that ignores the slot axis,
+# instead of being broadcast S× through HBM.
+# --------------------------------------------------------------------- #
+def _read(ref, is_batched):
+    """Squeeze the leading length-1 slot-block dim of a batched ref."""
+    return ref[0] if is_batched else ref[...]
+
+
+def _mask_body(
+    w_ref,
+    ba_ref, ea_ref, va_ref,
+    bb_ref, eb_ref, vb_ref,
+    out_ref,
+    *, rel, trel, has_window, batched,
+):
+    if batched is None:          # unbatched 2-D grid
+        s = 0
+        flags = (False,) * 6
+    else:                        # stacked 3-D grid; out always batched
+        s = pl.program_id(0)
+        flags = batched
+    ba, ea, va, bb, eb, vb = (
+        _read(r, f) for r, f in
+        zip((ba_ref, ea_ref, va_ref, bb_ref, eb_ref, vb_ref), flags))
+    w = w_ref[s] if has_window else None
+    m = _tile_mask(ba, ea, va, bb, eb, vb, w, rel=rel, trel=trel)
+    if batched is None:
+        out_ref[...] = m.astype(jnp.int8)
+    else:
+        out_ref[0] = m.astype(jnp.int8)
 
 
 def compat_mask_kernel(
+    window,                        # int32 [1] (scalar prefetch; dummy if !has_window)
     bind_a, ets_a, valid_a,        # [CA, NVA] i32, [CA, NEA] i32, [CA] i32
     bind_b, ets_b, valid_b,        # [CB, NVB] i32, [CB, NEB] i32, [CB] i32
-    rel: tuple,                    # static: tuple-of-tuples bool
-    trel: tuple,                   # static: tuple-of-tuples int
-    window: int | None,
+    *,
+    rel: tuple,                    # static: nested tuples bool
+    trel: tuple,                   # static: nested tuples int
+    has_window: bool,
+    tile_a: int,
+    tile_b: int,
     interpret: bool = False,
 ):
-    """Tiled pallas_call; CA/CB must be multiples of TILE_A/TILE_B."""
+    """Tiled pallas_call; CA/CB must be multiples of tile_a/tile_b."""
     ca, nva = bind_a.shape
     cb, nvb = bind_b.shape
     nea = ets_a.shape[1]
     neb = ets_b.shape[1]
-    rel_np = np.array(rel, dtype=bool).reshape(nva, nvb)
-    trel_np = np.array(trel, dtype=np.int8).reshape(nea, neb)
-
-    grid = (ca // TILE_A, cb // TILE_B)
+    grid = (ca // tile_a, cb // tile_b)
     body = functools.partial(
-        _kernel_body, rel=rel_np, trel=trel_np, window=window)
-
-    return pl.pallas_call(
-        body,
+        _mask_body, rel=rel, trel=trel, has_window=has_window, batched=None)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_A, nva), lambda i, j: (i, 0)),
-            pl.BlockSpec((TILE_A, nea), lambda i, j: (i, 0)),
-            pl.BlockSpec((TILE_A,), lambda i, j: (i,)),
-            pl.BlockSpec((TILE_B, nvb), lambda i, j: (j, 0)),
-            pl.BlockSpec((TILE_B, neb), lambda i, j: (j, 0)),
-            pl.BlockSpec((TILE_B,), lambda i, j: (j,)),
+            pl.BlockSpec((tile_a, nva), lambda i, j, w: (i, 0)),
+            pl.BlockSpec((tile_a, nea), lambda i, j, w: (i, 0)),
+            pl.BlockSpec((tile_a,), lambda i, j, w: (i,)),
+            pl.BlockSpec((tile_b, nvb), lambda i, j, w: (j, 0)),
+            pl.BlockSpec((tile_b, neb), lambda i, j, w: (j, 0)),
+            pl.BlockSpec((tile_b,), lambda i, j, w: (j,)),
         ],
-        out_specs=pl.BlockSpec((TILE_A, TILE_B), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((tile_a, tile_b), lambda i, j, w: (i, j)),
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((ca, cb), jnp.int8),
         interpret=interpret,
-    )(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b)
+    )(window, bind_a, ets_a, valid_a, bind_b, ets_b, valid_b)
+
+
+def _stacked_in_specs(batched, tile_a, tile_b, widths):
+    """Per-input BlockSpecs for the stacked 3-D grid.
+
+    ``batched[k]`` marks inputs with a leading [S] slot axis; inputs
+    shared across slots keep their 2-D shape and an index_map that
+    ignores the slot grid dim (read once, not broadcast S× in HBM).
+    ``widths`` is (nva, nea, nvb, neb).
+    """
+    nva, nea, nvb, neb = widths
+    # (block shape w/o leading dim, index_map w/o slot coordinate)
+    base = [
+        ((tile_a, nva), lambda s, i, j, w: (i, 0)),
+        ((tile_a, nea), lambda s, i, j, w: (i, 0)),
+        ((tile_a,), lambda s, i, j, w: (i,)),
+        ((tile_b, nvb), lambda s, i, j, w: (j, 0)),
+        ((tile_b, neb), lambda s, i, j, w: (j, 0)),
+        ((tile_b,), lambda s, i, j, w: (j,)),
+    ]
+    specs = []
+    for flag, (shape, idx) in zip(batched, base):
+        if flag:
+            specs.append(pl.BlockSpec(
+                (1,) + shape,
+                lambda s, i, j, w, idx=idx: (s,) + idx(s, i, j, w)))
+        else:
+            specs.append(pl.BlockSpec(shape, idx))
+    return specs
+
+
+def compat_mask_kernel_batched(
+    window,                        # int32 [S] (scalar prefetch)
+    bind_a, ets_a, valid_a,        # [S, CA, NVA] / [CA, NVA] etc.
+    bind_b, ets_b, valid_b,        # [S, CB, NVB] / [CB, NVB] etc.
+    *,
+    rel: tuple,
+    trel: tuple,
+    has_window: bool,
+    tile_a: int,
+    tile_b: int,
+    batched: tuple,                # static: which of the six inputs carry [S]
+    n_slots: int,
+    interpret: bool = False,
+):
+    """Stacked slot-group variant: ONE pallas_call over a 3-D grid
+    (slot, A-tile, B-tile) — the batched rule for vmapped joins."""
+    ca, nva = bind_a.shape[-2], bind_a.shape[-1]
+    cb, nvb = bind_b.shape[-2], bind_b.shape[-1]
+    nea = ets_a.shape[-1]
+    neb = ets_b.shape[-1]
+    grid = (n_slots, ca // tile_a, cb // tile_b)
+    body = functools.partial(
+        _mask_body, rel=rel, trel=trel, has_window=has_window,
+        batched=batched)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=_stacked_in_specs(batched, tile_a, tile_b,
+                                   (nva, nea, nvb, neb)),
+        out_specs=pl.BlockSpec(
+            (1, tile_a, tile_b), lambda s, i, j, w: (s, i, j)),
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_slots, ca, cb), jnp.int8),
+        interpret=interpret,
+    )(window, bind_a, ets_a, valid_a, bind_b, ets_b, valid_b)
+
+
+# --------------------------------------------------------------------- #
+# Fused mask + on-chip pair extraction kernels.
+# --------------------------------------------------------------------- #
+def _pairs_body(
+    w_ref,
+    ba_ref, ea_ref, va_ref,
+    bb_ref, eb_ref, vb_ref,
+    a_out, b_out, n_out,
+    cnt_ref,
+    *, rel, trel, has_window, batched, tile_a, tile_b, max_new,
+):
+    if batched is None:          # unbatched 2-D grid
+        s = 0
+        i, j = pl.program_id(0), pl.program_id(1)
+        n_i, n_j = pl.num_programs(0), pl.num_programs(1)
+        flags = (False,) * 6
+    else:                        # stacked 3-D grid; outputs batched
+        s = pl.program_id(0)
+        i, j = pl.program_id(1), pl.program_id(2)
+        n_i, n_j = pl.num_programs(1), pl.num_programs(2)
+        flags = batched
+    ba, ea, va, bb, eb, vb = (
+        _read(r, f) for r, f in
+        zip((ba_ref, ea_ref, va_ref, bb_ref, eb_ref, vb_ref), flags))
+
+    # Grid steps are sequential; (i, j) == (0, 0) is each slot's first
+    # visit — reset the running cursor and the (revisited) output block.
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        cnt_ref[0] = 0
+        if batched is not None:
+            a_out[...] = jnp.full((1, max_new), -1, jnp.int32)
+            b_out[...] = jnp.full((1, max_new), -1, jnp.int32)
+        else:
+            a_out[...] = jnp.full((max_new,), -1, jnp.int32)
+            b_out[...] = jnp.full((max_new,), -1, jnp.int32)
+
+    w = w_ref[s] if has_window else None
+    m = _tile_mask(ba, ea, va, bb, eb, vb, w, rel=rel, trel=trel)
+    n_tile = jnp.sum(m.astype(jnp.int32))
+    base = cnt_ref[0]
+
+    # Emit this tile's matches at out[base:base+n_emit] by repeatedly
+    # taking the first set element (masked min over a linear iota) and
+    # clearing it.  Trip count is the tile's match count (sparse joins:
+    # usually 0), clipped to the remaining output capacity.
+    rows = jax.lax.broadcasted_iota(jnp.int32, (tile_a, tile_b), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tile_a, tile_b), 1)
+    lin = rows * tile_b + cols
+    sentinel = jnp.int32(tile_a * tile_b)
+    n_emit = jnp.minimum(n_tile, jnp.maximum(max_new - base, 0))
+
+    def emit(k, mm):
+        masked = jnp.where(mm, lin, sentinel)
+        first = jnp.min(masked)
+        r = first // tile_b
+        c = first - r * tile_b
+        p = base + k
+        if batched is not None:
+            a_out[0, p] = i * tile_a + r
+            b_out[0, p] = j * tile_b + c
+        else:
+            a_out[p] = i * tile_a + r
+            b_out[p] = j * tile_b + c
+        return mm & (masked != first)
+
+    jax.lax.fori_loop(0, n_emit, emit, m)
+    cnt_ref[0] = base + n_tile          # count ALL matches (overflow stat)
+
+    @pl.when((i == n_i - 1) & (j == n_j - 1))
+    def _fin():
+        if batched is not None:
+            n_out[0, 0] = cnt_ref[0]
+        else:
+            n_out[0] = cnt_ref[0]
+
+
+def compat_join_pairs_kernel(
+    window,                        # int32 [1] (scalar prefetch)
+    bind_a, ets_a, valid_a,
+    bind_b, ets_b, valid_b,
+    *,
+    rel: tuple,
+    trel: tuple,
+    has_window: bool,
+    tile_a: int,
+    tile_b: int,
+    max_new: int,
+    interpret: bool = False,
+):
+    """Fused join + compaction: returns (a_idx [max_new], b_idx [max_new],
+    n_total [1]) with -1 fill — no [CA, CB] mask in HBM."""
+    ca, nva = bind_a.shape
+    cb, nvb = bind_b.shape
+    nea = ets_a.shape[1]
+    neb = ets_b.shape[1]
+    grid = (ca // tile_a, cb // tile_b)
+    body = functools.partial(
+        _pairs_body, rel=rel, trel=trel, has_window=has_window,
+        batched=None, tile_a=tile_a, tile_b=tile_b, max_new=max_new)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_a, nva), lambda i, j, w: (i, 0)),
+            pl.BlockSpec((tile_a, nea), lambda i, j, w: (i, 0)),
+            pl.BlockSpec((tile_a,), lambda i, j, w: (i,)),
+            pl.BlockSpec((tile_b, nvb), lambda i, j, w: (j, 0)),
+            pl.BlockSpec((tile_b, neb), lambda i, j, w: (j, 0)),
+            pl.BlockSpec((tile_b,), lambda i, j, w: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((max_new,), lambda i, j, w: (0,)),
+            pl.BlockSpec((max_new,), lambda i, j, w: (0,)),
+            pl.BlockSpec((1,), lambda i, j, w: (0,)),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((max_new,), jnp.int32),
+            jax.ShapeDtypeStruct((max_new,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(window, bind_a, ets_a, valid_a, bind_b, ets_b, valid_b)
+
+
+def compat_join_pairs_kernel_batched(
+    window,                        # int32 [S]
+    bind_a, ets_a, valid_a,        # [S, CA, ...] / [CA, ...]
+    bind_b, ets_b, valid_b,        # [S, CB, ...] / [CB, ...]
+    *,
+    rel: tuple,
+    trel: tuple,
+    has_window: bool,
+    tile_a: int,
+    tile_b: int,
+    max_new: int,
+    batched: tuple,                # static: which of the six inputs carry [S]
+    n_slots: int,
+    interpret: bool = False,
+):
+    """Stacked slot-group fused join: 3-D grid (slot, A-tile, B-tile);
+    the SMEM cursor resets at each slot's first tile."""
+    ca, nva = bind_a.shape[-2], bind_a.shape[-1]
+    cb, nvb = bind_b.shape[-2], bind_b.shape[-1]
+    nea = ets_a.shape[-1]
+    neb = ets_b.shape[-1]
+    grid = (n_slots, ca // tile_a, cb // tile_b)
+    body = functools.partial(
+        _pairs_body, rel=rel, trel=trel, has_window=has_window,
+        batched=batched, tile_a=tile_a, tile_b=tile_b, max_new=max_new)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=_stacked_in_specs(batched, tile_a, tile_b,
+                                   (nva, nea, nvb, neb)),
+        out_specs=[
+            pl.BlockSpec((1, max_new), lambda s, i, j, w: (s, 0)),
+            pl.BlockSpec((1, max_new), lambda s, i, j, w: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, i, j, w: (s, 0)),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_slots, max_new), jnp.int32),
+            jax.ShapeDtypeStruct((n_slots, max_new), jnp.int32),
+            jax.ShapeDtypeStruct((n_slots, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(window, bind_a, ets_a, valid_a, bind_b, ets_b, valid_b)

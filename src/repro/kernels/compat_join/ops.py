@@ -1,19 +1,79 @@
-"""Public jit'd wrapper for the compat_join Pallas kernel.
+"""Public jit'd wrappers for the compat_join Pallas kernels.
 
-Handles: padding the capacity axes to tile multiples (padded rows carry
-valid=0 so they never match), int32 casting of the bool valid masks, and
-the interpret switch for CPU validation.
+Responsibilities:
+
+* **Spec normalization cache** — ``normalize_spec`` converts the
+  REL/TREL numpy matrices into hashable nested tuples ONCE per distinct
+  spec (lru-cached by content), so repeated joins with the same spec
+  reuse the *identical* static kernel key instead of rebuilding nested
+  tuples per tick.
+* **Adaptive tiling + padding** — tile sizes come from
+  ``kernel.choose_tiles`` (shape-derived), and the capacity axes are
+  padded to tile multiples with ``valid=0`` rows that never match.
+* **Batched (vmapped) dispatch** — each op is wrapped in
+  ``jax.custom_batching.custom_vmap``: an unvmapped call lowers to the
+  2-D-grid kernel, while a vmapped call (the slot ticks of
+  ``repro.core.multi``) lowers to ONE stacked 3-D-grid kernel over
+  ``(slot, A-tile, B-tile)`` — one ``pallas_call`` per join for the
+  whole slot group, with per-slot traced windows.  Operands shared
+  across slots (e.g. the slot tick's stream-edge side) are NOT
+  broadcast: they stay 2-D and the kernel's index_map ignores the slot
+  grid dim, so the shared bytes are read once.
+* **Traced window** — ``window`` is passed to the kernel as a
+  scalar-prefetch input; changing it (or any slot's window) never
+  recompiles.  Only *whether* a window predicate exists is static.
+
+Ops:
+
+``compat_mask``        -> bool [CA, CB]   (drop-in for
+                          ``core.join.compat_mask_ref``)
+``compat_join_pairs``  -> (a_idx, b_idx, pair_valid, n_dropped), the
+                          fused equivalent of ``compat_mask`` +
+                          ``core.join.extract_pairs`` with no [CA, CB]
+                          mask materialized in HBM.  Pairs are emitted
+                          in tile order: same pair SET and exact
+                          ``n_dropped``; the keep-subset under overflow
+                          is backend-defined.
 """
 
 from __future__ import annotations
 
 import functools
 
+import numpy as np
 import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
 
-from repro.kernels.compat_join.kernel import TILE_A, TILE_B, compat_mask_kernel
+from repro.kernels.compat_join import kernel as K
 
 
+# --------------------------------------------------------------------- #
+# Spec normalization (lru-cached by content).
+# --------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=1024)
+def _spec_from_bytes(rel_bytes, rel_shape, trel_bytes, trel_shape):
+    rel = np.frombuffer(rel_bytes, dtype=np.bool_).reshape(rel_shape)
+    trel = np.frombuffer(trel_bytes, dtype=np.int8).reshape(trel_shape)
+    return (tuple(map(tuple, rel.tolist())),
+            tuple(map(tuple, trel.tolist())))
+
+
+def normalize_spec(rel, trel):
+    """Hashable nested-tuple ``(rel, trel)`` static kernel key.
+
+    Cached by content so every tick that joins with the same spec gets
+    back the *same* tuple objects — hash once, compare by identity —
+    instead of rebuilding ``tuple(map(tuple, rel.tolist()))`` per call.
+    """
+    rel = np.ascontiguousarray(np.asarray(rel, dtype=np.bool_))
+    trel = np.ascontiguousarray(np.asarray(trel, dtype=np.int8))
+    return _spec_from_bytes(rel.tobytes(), rel.shape,
+                            trel.tobytes(), trel.shape)
+
+
+# --------------------------------------------------------------------- #
+# Padding helpers.
+# --------------------------------------------------------------------- #
 def _pad_to(x, n, axis=0):
     pad = n - x.shape[axis]
     if pad == 0:
@@ -23,27 +83,144 @@ def _pad_to(x, n, axis=0):
     return jnp.pad(x, widths)
 
 
-def _ceil_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
+_ceil_to = K._ceil_to
+
+
+def _as_window(window):
+    """Traced 0-d int32 window (0 dummy when the predicate is off)."""
+    if window is None:
+        return jnp.zeros((), jnp.int32)
+    return jnp.asarray(window, jnp.int32).reshape(())
+
+
+def _prep_tables(bind, ets, valid, cap, axis):
+    return (_pad_to(bind.astype(jnp.int32), cap, axis),
+            _pad_to(ets.astype(jnp.int32), cap, axis),
+            _pad_to(valid.astype(jnp.int32), cap, axis))
+
+
+def _prep_stacked(args, in_batched, axis_size):
+    """Pad/cast the six table args + window for the stacked kernel.
+
+    Per-slot inputs pad along their row axis (1); inputs shared across
+    slots stay 2-D — the kernel reads them once via an index_map that
+    ignores the slot grid dim instead of broadcasting S× through HBM.
+    Only the (tiny) window is materialized per-slot.
+    """
+    *tables, window = args
+    flags = tuple(bool(b) for b in in_batched[:6])
+    if not in_batched[6]:
+        window = jnp.broadcast_to(window, (axis_size,))
+    ca = tables[0].shape[-2]
+    cb = tables[3].shape[-2]
+    ta, tb = K.choose_tiles(ca, cb)
+    cap, cbp = _ceil_to(max(ca, 1), ta), _ceil_to(max(cb, 1), tb)
+    padded = [
+        _pad_to(x.astype(jnp.int32), n, axis=1 if f else 0)
+        for x, f, n in zip(tables, flags,
+                           (cap, cap, cap, cbp, cbp, cbp))
+    ]
+    return (window.reshape(axis_size), padded, flags,
+            dict(tile_a=ta, tile_b=tb), ca, cb)
+
+
+# --------------------------------------------------------------------- #
+# compat_mask: custom-vmap op per static (spec, has_window, interpret).
+# --------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=None)
+def _mask_op(rel, trel, has_window, interpret):
+    @custom_vmap
+    def op(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, window):
+        ca, cb = bind_a.shape[0], bind_b.shape[0]
+        ta, tb = K.choose_tiles(ca, cb)
+        cap, cbp = _ceil_to(max(ca, 1), ta), _ceil_to(max(cb, 1), tb)
+        a = _prep_tables(bind_a, ets_a, valid_a, cap, 0)
+        b = _prep_tables(bind_b, ets_b, valid_b, cbp, 0)
+        out = K.compat_mask_kernel(
+            window.reshape(1), *a, *b,
+            rel=rel, trel=trel, has_window=has_window,
+            tile_a=ta, tile_b=tb, interpret=interpret)
+        return out[:ca, :cb].astype(jnp.bool_)
+
+    @op.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        window, padded, flags, tiles, ca, cb = _prep_stacked(
+            args, in_batched, axis_size)
+        out = K.compat_mask_kernel_batched(
+            window, *padded,
+            rel=rel, trel=trel, has_window=has_window, **tiles,
+            batched=flags, n_slots=axis_size, interpret=interpret)
+        return out[:, :ca, :cb].astype(jnp.bool_), True
+
+    return op
 
 
 def compat_mask(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel,
                 window=None, interpret: bool = False):
-    """Drop-in replacement for ``core.join.compat_mask_ref`` -> bool [CA, CB]."""
-    ca, cb = bind_a.shape[0], bind_b.shape[0]
-    cap = _ceil_to(max(ca, 1), TILE_A)
-    cbp = _ceil_to(max(cb, 1), TILE_B)
+    """Drop-in replacement for ``core.join.compat_mask_ref`` -> bool [CA, CB].
 
-    out = compat_mask_kernel(
-        _pad_to(bind_a.astype(jnp.int32), cap),
-        _pad_to(ets_a.astype(jnp.int32), cap),
-        _pad_to(valid_a.astype(jnp.int32), cap),
-        _pad_to(bind_b.astype(jnp.int32), cbp),
-        _pad_to(ets_b.astype(jnp.int32), cbp),
-        _pad_to(valid_b.astype(jnp.int32), cbp),
-        rel=tuple(map(tuple, rel.tolist())),
-        trel=tuple(map(tuple, trel.tolist())),
-        window=int(window) if window is not None else None,
-        interpret=interpret,
-    )
-    return out[:ca, :cb].astype(jnp.bool_)
+    ``window`` may be a Python int or a traced scalar (per-slot runtime
+    windows); it is a scalar-prefetch kernel input, not a compile-time
+    constant.  Under ``jax.vmap`` the op lowers to one stacked
+    3-D-grid kernel for the whole batch.
+    """
+    rel_tt, trel_tt = normalize_spec(rel, trel)
+    op = _mask_op(rel_tt, trel_tt, window is not None, bool(interpret))
+    return op(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b,
+              _as_window(window))
+
+
+# --------------------------------------------------------------------- #
+# compat_join_pairs: fused mask + on-chip pair extraction.
+# --------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=None)
+def _pairs_op(rel, trel, max_new, has_window, interpret):
+    @custom_vmap
+    def op(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, window):
+        ca, cb = bind_a.shape[0], bind_b.shape[0]
+        ta, tb = K.choose_tiles(ca, cb)
+        cap, cbp = _ceil_to(max(ca, 1), ta), _ceil_to(max(cb, 1), tb)
+        a = _prep_tables(bind_a, ets_a, valid_a, cap, 0)
+        b = _prep_tables(bind_b, ets_b, valid_b, cbp, 0)
+        a_idx, b_idx, n_total = K.compat_join_pairs_kernel(
+            window.reshape(1), *a, *b,
+            rel=rel, trel=trel, has_window=has_window,
+            tile_a=ta, tile_b=tb, max_new=max_new, interpret=interpret)
+        return a_idx, b_idx, n_total[0]
+
+    @op.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        window, padded, flags, tiles, ca, cb = _prep_stacked(
+            args, in_batched, axis_size)
+        a_idx, b_idx, n_total = K.compat_join_pairs_kernel_batched(
+            window, *padded,
+            rel=rel, trel=trel, has_window=has_window, **tiles,
+            max_new=max_new, batched=flags, n_slots=axis_size,
+            interpret=interpret)
+        return (a_idx, b_idx, n_total[:, 0]), (True, True, True)
+
+    return op
+
+
+def compat_join_pairs(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b,
+                      rel, trel, max_new: int, window=None,
+                      interpret: bool = False):
+    """Fused ``compat_mask`` + ``extract_pairs``: top-``max_new``
+    (a, b) pairs of the join, computed on-chip with no [CA, CB] mask
+    ever written to HBM.
+
+    Returns ``(a_idx, b_idx, pair_valid, n_dropped)`` with the same
+    contract as ``core.join.extract_pairs`` applied to the mask, except
+    that pairs are emitted in tile order (set semantics; ``n_dropped``
+    is exact, the keep-subset under overflow is backend-defined).
+    """
+    rel_tt, trel_tt = normalize_spec(rel, trel)
+    op = _pairs_op(rel_tt, trel_tt, int(max_new), window is not None,
+                   bool(interpret))
+    a_raw, b_raw, n_total = op(
+        bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, _as_window(window))
+    pair_valid = a_raw >= 0
+    a_idx = jnp.maximum(a_raw, 0)
+    b_idx = jnp.maximum(b_raw, 0)
+    n_dropped = jnp.maximum(n_total - max_new, 0)
+    return a_idx, b_idx, pair_valid, n_dropped

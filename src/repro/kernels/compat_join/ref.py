@@ -1,10 +1,23 @@
-"""Pure-jnp oracle for the compat_join kernel (same code path the engine
-uses as its reference backend)."""
+"""Pure-jnp oracles for the compat_join kernels (same code paths the
+engine uses as its reference backend)."""
 
-from repro.core.join import compat_mask_ref
+from repro.core.join import compat_mask_ref, extract_pairs
 
 
 def compat_mask(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel,
                 window=None):
     return compat_mask_ref(
         bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel, window)
+
+
+def compat_join_pairs(bind_a, ets_a, valid_a, bind_b, ets_b, valid_b,
+                      rel, trel, max_new, window=None):
+    """Oracle for the fused kernel: materialize the mask, then extract.
+
+    Keep-order is the mask's flattened row-major order; the fused kernel
+    guarantees the same pair SET and the same ``n_dropped`` (tile-order
+    emission — see ``ops.compat_join_pairs``).
+    """
+    mask = compat_mask_ref(
+        bind_a, ets_a, valid_a, bind_b, ets_b, valid_b, rel, trel, window)
+    return extract_pairs(mask, max_new)

@@ -19,6 +19,15 @@ slot groups keyed by structural signature:
 Batches must keep a fixed shape (pad the tail; ``to_batches`` does) —
 a new batch size re-specializes the jitted ticks, as usual under JAX.
 
+``backend`` selects the compatibility-join implementation for every
+group's slot tick: ``JoinBackend.REF`` (pure jnp), ``PALLAS`` (fused
+TPU kernels — one stacked 3-D-grid join per slot group, per-slot
+windows as scalar-prefetch inputs, on-chip pair extraction), or
+``PALLAS_INTERPRET`` (the kernels interpreted on CPU, for validation).
+Registration stays a pure data write under all backends.  Note the
+compiled ``PALLAS`` path is interpret-parity-tested only (CI has no
+TPU); validate on hardware before serving with it (ROADMAP.md).
+
 Example
 -------
     svc = ContinuousSearchService()
@@ -84,6 +93,9 @@ class ContinuousSearchService:
         max_out: int | None = None,
         jit: bool = True,
     ):
+        if backend not in (J.JoinBackend.REF, J.JoinBackend.PALLAS,
+                           J.JoinBackend.PALLAS_INTERPRET):
+            raise ValueError(f"unknown join backend: {backend!r}")
         self.slots_per_group = slots_per_group
         self.backend = backend
         self.extract_matches = extract_matches

@@ -1,5 +1,6 @@
-"""compat_join Pallas kernel vs pure-jnp oracle: shape/dtype/spec sweep
-(interpret mode executes the kernel body on CPU)."""
+"""compat_join Pallas kernels vs pure-jnp oracle: shape/dtype/spec sweep,
+traced windows, vmapped slot-group batching, and the fused pair-extraction
+op (interpret mode executes the kernel bodies on CPU)."""
 
 import numpy as np
 import pytest
@@ -9,10 +10,12 @@ import jax.numpy as jnp
 
 from repro.core import compile_plan
 from repro.core.engine import build_tick, current_matches
-from repro.core.join import JoinBackend, compat_mask_ref
+from repro.core.join import JoinBackend, compat_mask_ref, extract_pairs
 from repro.core.query import QueryGraph
 from repro.core.state import init_state, make_batch
 from repro.kernels.compat_join import ops as cj_ops
+from repro.kernels.compat_join import ref as cj_ref
+from repro.kernels.compat_join.kernel import TILE_A, TILE_B, choose_tiles
 from repro.stream.generator import StreamConfig, synth_traffic_stream, to_batches
 
 
@@ -63,6 +66,184 @@ def test_kernel_random_specs(seed):
         got = cj_ops.compat_mask(*args[:6], args[6], args[7], args[8],
                                  interpret=True)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------- #
+# Adaptive tiling.
+# --------------------------------------------------------------------- #
+def test_choose_tiles_adapts_to_shape():
+    assert choose_tiles(4096, 4096) == (TILE_A, TILE_B)
+    # the common small-delta join no longer pads up to 256x256
+    ta, tb = choose_tiles(64, 64)
+    assert ta == 64 and tb == 128
+    assert choose_tiles(1, 1) == (8, 128)
+    assert choose_tiles(300, 130) == (256, 256)
+    ta, tb = choose_tiles(9, 129)
+    assert ta % 8 == 0 and tb % 128 == 0
+
+
+# --------------------------------------------------------------------- #
+# Traced windows.
+# --------------------------------------------------------------------- #
+def test_traced_window_parity_and_no_recompile():
+    """``window`` is a scalar-prefetch input: changing it between calls
+    produces oracle-exact masks from ONE jit trace (no recompile)."""
+    rng = np.random.default_rng(7)
+    args = rand_case(rng, 64, 48, 3, 2, 2, 1, None)
+    f = jax.jit(lambda w: cj_ops.compat_mask(
+        *args[:6], args[6], args[7], w, interpret=True))
+    for w in (1, 7, 13, 29):
+        want = compat_mask_ref(*args[:6], args[6], args[7], w)
+        got = f(jnp.asarray(w, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert f._cache_size() == 1
+
+
+def test_traced_window_crossing_row_expiry_mid_tick():
+    """Rows near expiry must stay joinable for earlier-timestamped B rows
+    and be invisible to later ones (the paper's two-phase deletion as a
+    window-span predicate): B timestamps straddle the A rows' expiry."""
+    window = 10
+    # A rows at ts 0, 5, 9; B rows at ts 8, 9, 12, 18: the (0, 12) pair
+    # crosses expiry (span 12 >= 10) while (0, 9) does not.
+    ets_a = jnp.asarray([[0], [5], [9]], jnp.int32)
+    ets_b = jnp.asarray([[8], [9], [12], [18]], jnp.int32)
+    bind_a = jnp.asarray([[1], [2], [3]], jnp.int32)
+    bind_b = jnp.asarray([[4], [5], [6], [7]], jnp.int32)
+    va = jnp.ones((3,), jnp.bool_)
+    vb = jnp.ones((4,), jnp.bool_)
+    rel = np.zeros((1, 1), bool)               # all-distinct vertices
+    trel = np.full((1, 1), -1, np.int8)        # ts_a < ts_b
+    want = compat_mask_ref(bind_a, ets_a, va, bind_b, ets_b, vb,
+                           rel, trel, window)
+    got = cj_ops.compat_mask(bind_a, ets_a, va, bind_b, ets_b, vb,
+                             rel, trel, window, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    w = np.asarray(want)
+    assert w[0, 1] and not w[0, 2] and not w[0, 3]   # crossing pairs drop
+    assert w[2, 2] and w[2, 3]                       # late rows still join
+
+
+# --------------------------------------------------------------------- #
+# Batched (vmapped) slot-group joins -> stacked 3-D-grid kernel.
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("mixed", [False, True])
+def test_vmapped_slot_group_mask_matches_per_slot_ref(mixed):
+    """jax.vmap over stacked tables + per-slot windows lowers to ONE
+    stacked kernel and equals the per-slot reference masks.  ``mixed``
+    leaves the B side unbatched (the slot tick's stream-edge operand)."""
+    rng = np.random.default_rng(11)
+    S, ca, cb = 3, 40, 24
+    args = rand_case(rng, ca, cb, 3, 2, 2, 1, None)
+    ba, ea, va, bb, eb, vb, rel, trel, _ = args
+    bas = jnp.stack([ba, (ba + 1) % 6, ba[::-1]])
+    ebs = jnp.stack([eb, eb + 1, eb])
+    ws = jnp.asarray([4, 11, 25], jnp.int32)
+    if mixed:   # B side (stream edges) shared across slots, A batched
+        fn = jax.jit(jax.vmap(
+            lambda xa, w: cj_ops.compat_mask(
+                xa, ea, va, bb, eb, vb, rel, trel, w, interpret=True),
+            in_axes=(0, 0)))
+        got = fn(bas, ws)
+    else:       # both sides batched
+        fn = jax.jit(jax.vmap(
+            lambda xa, xeb, w: cj_ops.compat_mask(
+                xa, ea, va, bb, xeb, vb, rel, trel, w, interpret=True),
+            in_axes=(0, 0, 0)))
+        got = fn(bas, ebs, ws)
+    for s in range(S):
+        xeb = eb if mixed else ebs[s]
+        want = compat_mask_ref(bas[s], ea, va, bb, xeb, vb, rel, trel,
+                               int(ws[s]))
+        np.testing.assert_array_equal(np.asarray(got[s]), np.asarray(want))
+
+
+# --------------------------------------------------------------------- #
+# Fused pair extraction (compat_join_pairs).
+# --------------------------------------------------------------------- #
+def _pair_set(a_idx, b_idx, valid):
+    a, b, v = (np.asarray(x) for x in (a_idx, b_idx, valid))
+    return set(zip(a[v].tolist(), b[v].tolist()))
+
+
+def _check_pairs_vs_oracle(args, max_new):
+    want_mask = compat_mask_ref(*args[:6], args[6], args[7], args[8])
+    wa, wb, wv, wd = extract_pairs(want_mask, max_new)
+    ga, gb, gv, gd = cj_ops.compat_join_pairs(
+        *args[:6], args[6], args[7], max_new, args[8], interpret=True)
+    assert int(gd) == int(wd), "n_dropped must be exact"
+    want_set = _pair_set(wa, wb, wv)
+    got_set = _pair_set(ga, gb, gv)
+    if int(wd) == 0:
+        assert got_set == want_set
+    else:
+        full = set(zip(*(x.tolist() for x in np.nonzero(np.asarray(want_mask)))))
+        assert len(got_set) == max_new and got_set <= full
+    # invalid entries are clamped to safe indices like extract_pairs
+    assert int(jnp.min(ga)) >= 0 and int(jnp.min(gb)) >= 0
+
+
+@pytest.mark.parametrize("ca,cb,nva,nvb,nea,neb,window", SHAPES)
+def test_fused_pairs_match_mask_plus_extract(ca, cb, nva, nvb, nea, neb,
+                                             window):
+    rng = np.random.default_rng(ca * 31 + cb)
+    args = rand_case(rng, ca, cb, nva, nvb, nea, neb, window)
+    for max_new in (4, 64, 2048):
+        _check_pairs_vs_oracle(args, max_new)
+
+
+def test_fused_pairs_vmapped_slot_group():
+    """Vmapped fused pairs (the PALLAS slot-tick join) == per-slot
+    mask + extract_pairs, including per-slot n_dropped."""
+    rng = np.random.default_rng(13)
+    S, ca, cb, max_new = 3, 40, 24, 16
+    args = rand_case(rng, ca, cb, 2, 2, 2, 1, None)
+    ba, ea, va, bb, eb, vb, rel, trel, _ = args
+    bas = jnp.stack([ba % 3, ba % 4, ba % 5])
+    ws = jnp.asarray([6, 12, 29], jnp.int32)
+    fn = jax.jit(jax.vmap(
+        lambda xa, w: cj_ops.compat_join_pairs(
+            xa, ea, va, bb, eb, vb, rel, trel, max_new, w, interpret=True),
+        in_axes=(0, 0)))
+    ga, gb, gv, gd = fn(bas, ws)
+    assert fn._cache_size() == 1
+    for s in range(S):
+        mask = compat_mask_ref(bas[s], ea, va, bb, eb, vb, rel, trel,
+                               int(ws[s]))
+        wa, wb, wv, wd = extract_pairs(mask, max_new)
+        assert int(gd[s]) == int(wd)
+        if int(wd) == 0:
+            assert _pair_set(ga[s], gb[s], gv[s]) == _pair_set(wa, wb, wv)
+        else:
+            full = set(zip(*(x.tolist()
+                             for x in np.nonzero(np.asarray(mask)))))
+            assert _pair_set(ga[s], gb[s], gv[s]) <= full
+
+
+def test_spec_normalization_is_cached():
+    """Equal-content specs map to the identical cached tuple objects, so
+    repeated joins reuse the same static kernel key per tick."""
+    rng = np.random.default_rng(3)
+    rel = rng.random((3, 2)) < 0.5
+    trel = rng.integers(-1, 2, (2, 1)).astype(np.int8)
+    k1 = cj_ops.normalize_spec(rel, trel)
+    k2 = cj_ops.normalize_spec(rel.copy(), trel.copy())
+    assert k1[0] is k2[0] and k1[1] is k2[1]
+    k3 = cj_ops.normalize_spec(~rel, trel)
+    assert k3[0] is not k1[0]
+
+
+def test_ref_module_pairs_oracle():
+    """The kernel package's own oracle (ref.py) agrees with core.join."""
+    rng = np.random.default_rng(5)
+    args = rand_case(rng, 30, 20, 2, 2, 2, 1, 9)
+    wa, wb, wv, wd = cj_ref.compat_join_pairs(
+        *args[:6], args[6], args[7], 16, args[8])
+    mask = compat_mask_ref(*args[:6], args[6], args[7], args[8])
+    ea_, eb_, ev_, ed_ = extract_pairs(mask, 16)
+    np.testing.assert_array_equal(np.asarray(wa), np.asarray(ea_))
+    np.testing.assert_array_equal(np.asarray(wv), np.asarray(ev_))
+    assert int(wd) == int(ed_)
 
 
 def test_engine_with_pallas_backend_matches_ref_backend():
