@@ -1,22 +1,29 @@
-"""Multi-tenant continuous search: many standing queries, one stream.
+"""Multi-tenant continuous search: many standing queries, one stream,
+crash-safe serving.
 
-Demonstrates the service layer built on the multi-query engine:
+Demonstrates the unified serving path (ContinuousSearchService):
 
   1. register several timing-constrained queries (different tenants);
-  2. ingest a live edge stream batch-by-batch, collecting per-query
-     match deltas as they happen;
+  2. serve a live edge stream with adaptive tick coalescing, collecting
+     per-query match deltas as they happen, while the service
+     checkpoints itself asynchronously every few ticks;
   3. register a NEW query mid-stream — because it shares a structural
      signature with an existing slot group, no recompilation happens
      (watch ``svc.n_compiles``);
-  4. unregister a tenant and keep serving the rest.
+  4. "crash" the server, then ``ContinuousSearchService.restore`` it
+     from the newest usable checkpoint: every tenant comes back under
+     its original qid, the compiled ticks come from the process-wide
+     SlotTickCache (zero recompiles), and replaying the unserved tail
+     of the stream misses nothing still inside the window.
 
 Run:  PYTHONPATH=src python examples/multi_query_service.py
 """
 
+import tempfile
+
 from repro.core.query import QueryGraph
 from repro.runtime.service import ContinuousSearchService
-from repro.stream.generator import StreamConfig, synth_traffic_stream, to_batches
-
+from repro.stream.generator import StreamConfig, synth_traffic_stream
 
 def main():
     # A traffic-like stream: 3 vertex labels (host classes), 4 edge labels
@@ -24,10 +31,11 @@ def main():
     stream = synth_traffic_stream(StreamConfig(
         n_edges=2000, n_vertices=60, n_vertex_labels=3, n_edge_labels=4,
         seed=7, ts_step_max=2))
-    batches = list(to_batches(stream, 64))
+    ckpt_dir = tempfile.mkdtemp(prefix="tcss_ckpt_")
 
     svc = ContinuousSearchService(
-        slots_per_group=4, level_capacity=4096, l0_capacity=4096, max_new=1024)
+        slots_per_group=4, level_capacity=4096, l0_capacity=4096,
+        max_new=1024, ckpt_dir=ckpt_dir)
 
     # Tenant A: lateral movement — a timing-ordered 2-hop chain 0 -> 1 -> 2.
     chain = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2)),
@@ -40,12 +48,13 @@ def main():
     print(f"registered qa={qa} (chain) qb={qb} (triangle); "
           f"compiles so far: {svc.n_compiles}")
 
-    counts = {qa: 0, qb: 0}
-    half = len(batches) // 2
-    for b in batches[:half]:
-        for qid, res in svc.ingest(b).items():
-            counts[qid] += int(res.n_new_matches)
-    print(f"mid-stream: chain={counts[qa]} triangle={counts[qb]} new matches")
+    # serve the first half with periodic async checkpoints
+    half = len(stream) // 2
+    counts = svc.serve_stream(
+        stream[:half], ckpt_every=5, batch_size=64)
+    print(f"mid-stream: chain={counts.get(qa, 0)} "
+          f"triangle={counts.get(qb, 0)} new matches "
+          f"(served {svc.n_edges_ingested} edges in {svc.n_ticks} ticks)")
 
     # Tenant C arrives mid-stream with a *relabeled* chain (hosts of class
     # 2 -> 0 -> 1).  Same structure as tenant A's chain, so registration
@@ -57,18 +66,26 @@ def main():
     assert svc.n_compiles == before, "same-structure registration recompiled!"
     print(f"registered qc={qc} mid-stream with NO recompile "
           f"(compiles: {svc.n_compiles})")
-
     svc.unregister(qb)  # tenant B leaves; its slot is reusable
-    counts[qc] = 0
-    for b in batches[half:]:
-        for qid, res in svc.ingest(b).items():
-            counts[qid] += int(res.n_new_matches)
+    svc.checkpoint()    # make the new tenant layout durable
+    svc.ckpt.wait()
 
-    print(f"end of stream: chain={counts[qa]} relabeled-chain={counts[qc]} "
-          f"new matches over {svc.n_edges_ingested} edges")
+    # ---- simulated crash: the server object is gone ---------------------
+    del svc
+    svc = ContinuousSearchService.restore(ckpt_dir)
+    print(f"restored from {ckpt_dir}: {svc.n_active} tenants, "
+          f"resume offset {svc.n_edges_ingested}, "
+          f"recompiles on restore: {svc.n_compiles} (ticks were cached)")
+
+    # replay the unserved tail; a restored server misses nothing in-window
+    counts2 = svc.serve_stream(stream[svc.n_edges_ingested:], ckpt_every=5)
+    print(f"end of stream: chain={counts.get(qa, 0) + counts2.get(qa, 0)} "
+          f"relabeled-chain={counts2.get(qc, 0)} new matches over "
+          f"{svc.n_edges_ingested} edges")
     print(f"windowed matches live right now: qa={len(svc.matches(qa))} "
           f"qc={len(svc.matches(qc))}")
-    print(f"total slot-group compiles for 3 tenants + churn: {svc.n_compiles}")
+    print(f"total slot-group compiles for 3 tenants + churn + crash/"
+          f"restore: {svc.n_compiles}")
 
 
 if __name__ == "__main__":

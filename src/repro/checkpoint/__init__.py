@@ -1,7 +1,12 @@
 from repro.checkpoint.ckpt import (
-    save_checkpoint,
-    restore_checkpoint,
-    latest_step,
     AsyncCheckpointer,
+    CheckpointError,
+    checkpoint_steps,
+    latest_step,
+    load_manifest,
+    prune_checkpoints,
     reshard,
+    restore_checkpoint,
+    save_checkpoint,
+    validate_checkpoint,
 )

@@ -1,21 +1,35 @@
 """Checkpointing: pytree save/restore with mesh resharding + async writer.
 
 Format: one ``step_<N>.npz`` per checkpoint (flattened key-path -> array)
-plus a tiny JSON manifest.  Restore accepts a target mesh + PartitionSpec
-tree, so a checkpoint written on one mesh restores onto any other mesh
-(elastic scaling path — runtime/elastic.py round-trips through here).
+plus a JSON manifest ``step_<N>.json`` carrying caller metadata (the
+``extra`` dict — e.g. the ContinuousSearchService serialises its whole
+registry/slot layout there).  Restore accepts a target mesh +
+PartitionSpec tree, so a checkpoint written on one mesh restores onto any
+other mesh (elastic scaling path — runtime/elastic.py round-trips
+through here).
+
+Crash consistency: both files are written to a temp name and published
+with ``os.replace`` (atomic on POSIX), manifest first and the ``.npz``
+last — the ``.npz`` is the commit point, so a visible checkpoint always
+has a readable manifest.  A torn/partial checkpoint (truncated zip,
+unparseable or missing manifest — e.g. files from a crashed writer or a
+bad disk) is *skipped* by ``latest_step`` and surfaces from
+``restore_checkpoint``/``load_manifest`` as ``CheckpointError`` so
+recovery paths can fall back to the previous step instead of crashing.
 
 The async writer snapshots to host memory synchronously (cheap: device->
-host copy) and writes the file on a background thread, so the train loop
-never blocks on disk.
+host copy) and writes the file on a background thread, so the serving /
+train loop never blocks on disk.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
 import threading
+import zipfile
 from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
@@ -23,6 +37,10 @@ import jax
 
 
 SEP = "::"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint on disk is torn, partial, or unreadable."""
 
 
 def _flatten(tree):
@@ -34,25 +52,123 @@ def _flatten(tree):
     return flat
 
 
+def _paths(ckpt_dir: str, step: int) -> tuple[str, str]:
+    return (os.path.join(ckpt_dir, f"step_{step}.npz"),
+            os.path.join(ckpt_dir, f"step_{step}.json"))
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None):
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(tree)
+    out, man_out = _paths(ckpt_dir, step)
     tmp = os.path.join(ckpt_dir, f".tmp_step_{step}.npz")
-    out = os.path.join(ckpt_dir, f"step_{step}.npz")
     np.savez(tmp, **flat)
-    os.replace(tmp, out)                       # atomic publish
-    manifest = {"step": step, "n_arrays": len(flat), **(extra or {})}
-    with open(os.path.join(ckpt_dir, f"step_{step}.json"), "w") as f:
+    # the manifest records the npz content hash: overwriting an existing
+    # step is two replaces, and the hash is what ties the PAIR together —
+    # a crash between them leaves a new manifest with an old npz, which
+    # validate_checkpoint then rejects as torn instead of silently
+    # restoring mismatched state
+    manifest = {"step": step, "n_arrays": len(flat),
+                "npz_sha256": _sha256(tmp), **(extra or {})}
+    man_tmp = os.path.join(ckpt_dir, f".tmp_step_{step}.json")
+    with open(man_tmp, "w") as f:
         json.dump(manifest, f)
+    os.replace(man_tmp, man_out)               # manifest published first ...
+    os.replace(tmp, out)                       # ... npz last: the commit point
     return out
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def prune_checkpoints(ckpt_dir: str, keep_last: int) -> list[int]:
+    """Delete all but the newest ``keep_last`` published checkpoints;
+    returns the pruned step ids.  A long-lived serving loop checkpoints
+    forever — without retention the directory grows without bound."""
+    if keep_last <= 0:
+        raise ValueError("keep_last must be positive")
+    pruned = checkpoint_steps(ckpt_dir)[:-keep_last]
+    for step in pruned:
+        for path in _paths(ckpt_dir, step):
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+    return pruned
+
+
+def checkpoint_steps(ckpt_dir: str) -> list[int]:
+    """All steps with a published ``.npz``, ascending (not validated)."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
-             if (m := re.fullmatch(r"step_(\d+)\.npz", f))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                  if (m := re.fullmatch(r"step_(\d+)\.npz", f)))
+
+
+def validate_checkpoint(ckpt_dir: str, step: int) -> None:
+    """Raise ``CheckpointError`` if checkpoint ``step`` is torn/partial.
+
+    Checks: the JSON manifest exists and parses, and the ``.npz`` is
+    byte-identical to what ``save_checkpoint`` wrote (``npz_sha256`` in
+    the manifest — this both detects torn files AND proves the
+    manifest/npz PAIR belongs together after a crash mid-overwrite of an
+    existing step).  A manifest without a hash (foreign writer) falls
+    back to a zip CRC scan; either way the npz is read once.
+    """
+    npz, man = _paths(ckpt_dir, step)
+    try:
+        with open(man) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(f"step {step}: bad manifest {man}: {e}") from e
+    want = manifest.get("npz_sha256")
+    try:
+        if want is not None:
+            if want != _sha256(npz):
+                raise CheckpointError(
+                    f"step {step}: manifest does not match {npz} "
+                    "(torn write, or crash while overwriting the step?)")
+        else:
+            with zipfile.ZipFile(npz) as z:
+                bad = z.testzip()
+                if bad is not None:
+                    raise CheckpointError(
+                        f"step {step}: corrupt member {bad!r} in {npz}")
+    except (zipfile.BadZipFile, OSError, EOFError) as e:
+        raise CheckpointError(f"step {step}: torn archive {npz}: {e}") from e
+
+
+def latest_step(ckpt_dir: str, validate: bool = True) -> int | None:
+    """Newest *usable* checkpoint step (``None`` if there is none).
+
+    With ``validate`` (default), torn/partial checkpoints are skipped, so
+    a crash mid-write can never wedge the restore path on a bad file.
+    """
+    steps = checkpoint_steps(ckpt_dir)
+    if not validate:
+        return steps[-1] if steps else None
+    for step in reversed(steps):
+        try:
+            validate_checkpoint(ckpt_dir, step)
+            return step
+        except CheckpointError:
+            continue
+    return None
+
+
+def load_manifest(ckpt_dir: str, step: int) -> dict:
+    """The JSON manifest written alongside ``step``'s arrays."""
+    _, man = _paths(ckpt_dir, step)
+    try:
+        with open(man) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(f"step {step}: bad manifest {man}: {e}") from e
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, like_tree,
@@ -61,8 +177,17 @@ def restore_checkpoint(ckpt_dir: str, step: int, like_tree,
 
     With ``mesh``+``specs``: device_put every leaf with its NamedSharding
     (this IS the reshard — numpy leaves place onto any mesh shape).
+    Raises ``CheckpointError`` for a torn file (missing or corrupt zip)
+    so callers can fall back to an older step.  A *missing array* or a
+    *shape* mismatch raises ``ValueError`` instead: the npz publishes
+    atomically, so either one means the caller's state schema drifted —
+    a real config error that must be loud, not silently skipped.
     """
-    data = np.load(os.path.join(ckpt_dir, f"step_{step}.npz"))
+    npz, _ = _paths(ckpt_dir, step)
+    try:
+        data = np.load(npz)
+    except (OSError, zipfile.BadZipFile, ValueError, EOFError) as e:
+        raise CheckpointError(f"step {step}: unreadable {npz}: {e}") from e
     flat_like, tdef = jax.tree.flatten(like_tree)
     flat_keys = [
         SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
@@ -70,7 +195,12 @@ def restore_checkpoint(ckpt_dir: str, step: int, like_tree,
     ]
     leaves = []
     for key, like in zip(flat_keys, flat_like):
-        arr = data[key]
+        try:
+            arr = data[key]
+        except KeyError as e:
+            raise ValueError(
+                f"step {step}: array {key!r} missing from {npz} "
+                "(state schema drift?)") from e
         if arr.shape != like.shape:
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {like.shape}")
@@ -100,10 +230,20 @@ class AsyncCheckpointer:
         self._lock = threading.Lock()
         self._pending = []
 
-    def save(self, step: int, tree, extra: dict | None = None):
+    def save(self, step: int, tree, extra: dict | None = None,
+             keep_last: int | None = None):
+        """With ``keep_last``, older checkpoints are pruned on the writer
+        thread AFTER the new step publishes (single-thread FIFO pool, so
+        the prune can never race ahead of the write)."""
         host = jax.tree.map(np.asarray, jax.device_get(tree))  # sync snapshot
-        fut = self._pool.submit(
-            save_checkpoint, self.ckpt_dir, step, host, extra)
+
+        def _write():
+            out = save_checkpoint(self.ckpt_dir, step, host, extra)
+            if keep_last is not None:
+                prune_checkpoints(self.ckpt_dir, keep_last)
+            return out
+
+        fut = self._pool.submit(_write)
         with self._lock:
             self._pending.append(fut)
         return fut

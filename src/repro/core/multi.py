@@ -266,3 +266,82 @@ def build_slot_tick(
         return sstate._replace(engines=engines), results
 
     return tick
+
+
+# --------------------------------------------------------------------- #
+# Compiled-tick cache: one build + jit per structural signature
+# --------------------------------------------------------------------- #
+class SlotTickCache:
+    """Process-wide cache of compiled slot ticks, keyed by structure.
+
+    ``build_slot_tick`` closes over only *structural* plan data (that is
+    the whole point of ``plan_signature``), so ONE compiled — and, with
+    ``jit=True``, jitted — tick can serve every slot group, in every
+    ``ContinuousSearchService`` instance, whose template shares a
+    signature.  Two consequences:
+
+    * a group that overflows into a sibling group reuses the compiled
+      tick instead of rebuilding an identical one;
+    * a service restored after a crash (``ContinuousSearchService.
+      restore``) re-arms all of its groups with cache *hits*: zero
+      recompiles for structures this process has already served, and the
+      shared jitted tick keeps its XLA trace cache, so the first
+      post-restore batch of an already-seen shape does not retrace.
+
+    ``donate=True`` jits with ``donate_argnums=(0,)``: the previous
+    ``SlotState`` buffers are donated to each tick, so steady-state
+    serving updates slot tables in place instead of copying them every
+    tick (callers must treat the passed-in state as consumed — the
+    service does).
+
+    The cache is LRU-bounded (``max_entries``) so a long-lived server
+    seeing many distinct structures over its lifetime does not leak
+    compiled ticks without limit.  Eviction is always safe: live slot
+    groups hold their own reference to their tick, so an evicted entry
+    only means the NEXT group of that structure rebuilds.
+    """
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._ticks: dict[tuple, object] = {}   # insertion-ordered (LRU)
+        self.n_builds = 0        # build_slot_tick invocations (cache misses)
+
+    def __len__(self) -> int:
+        return len(self._ticks)
+
+    def ticks(self) -> list:
+        """The cached (possibly jitted) tick callables."""
+        return list(self._ticks.values())
+
+    def get(
+        self,
+        template_plan: ExecutionPlan,
+        backend: str = J.JoinBackend.REF,
+        extract_matches: bool = True,
+        max_out: int | None = None,
+        jit: bool = True,
+        donate: bool = False,
+    ):
+        from repro.core.registry import plan_signature
+
+        key = (plan_signature(template_plan), backend, extract_matches,
+               max_out, jit, donate)
+        tick = self._ticks.pop(key, None)
+        if tick is None:
+            tick = build_slot_tick(
+                template_plan, backend=backend,
+                extract_matches=extract_matches, max_out=max_out)
+            if jit:
+                tick = jax.jit(
+                    tick, donate_argnums=(0,) if donate else ())
+            self.n_builds += 1
+        self._ticks[key] = tick                 # (re)insert at LRU tail
+        while len(self._ticks) > self.max_entries:
+            self._ticks.pop(next(iter(self._ticks)))
+        return tick
+
+    def clear(self):
+        self._ticks.clear()
+
+
+GLOBAL_SLOT_TICK_CACHE = SlotTickCache()

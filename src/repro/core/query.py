@@ -143,6 +143,30 @@ class QueryGraph:
         )
 
     # ------------------------------------------------------------------ #
+    def to_spec(self) -> dict:
+        """JSON-serializable description (checkpoint manifests round-trip
+        registered queries through this)."""
+        return {
+            "n_vertices": self.n_vertices,
+            "vertex_labels": list(self.vertex_labels),
+            "edges": [list(e) for e in self.edges],
+            "edge_labels": list(self.edge_labels),
+            "prec": sorted(list(p) for p in self.prec),
+        }
+
+    @classmethod
+    def from_spec(cls, spec: dict) -> "QueryGraph":
+        """Inverse of ``to_spec`` (prec re-closes transitively, a no-op
+        for specs produced by ``to_spec``)."""
+        return cls(
+            n_vertices=int(spec["n_vertices"]),
+            vertex_labels=tuple(int(v) for v in spec["vertex_labels"]),
+            edges=tuple((int(u), int(v)) for u, v in spec["edges"]),
+            edge_labels=tuple(int(l) for l in spec["edge_labels"]),
+            prec=frozenset((int(i), int(j)) for i, j in spec["prec"]),
+        )
+
+    # ------------------------------------------------------------------ #
     def vertices_of(self, edge_ids) -> tuple[int, ...]:
         """Sorted vertex ids touched by ``edge_ids``."""
         vs: set[int] = set()

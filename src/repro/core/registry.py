@@ -14,11 +14,18 @@ interchangeable under one compiled slot tick.
 
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 
+from repro.core.decompose import TCSubquery
 from repro.core.plan import ExecutionPlan, compile_plan
 from repro.core.query import QueryGraph
+
+
+def plan_decomposition(plan: ExecutionPlan) -> list[tuple[int, ...]]:
+    """The plan's (ordered) TC-subquery timing sequences — enough to
+    recompile the SAME plan, bypassing the decomposition heuristics
+    (checkpoint manifests round-trip plans through this)."""
+    return [tuple(s.timing_sequence) for s in plan.subqueries]
 
 
 def plan_signature(plan: ExecutionPlan) -> tuple:
@@ -74,25 +81,85 @@ class QueryRegistry:
         self.l0_capacity = l0_capacity
         self.max_new = max_new
         self._queries: dict[int, RegisteredQuery] = {}
-        self._next_qid = itertools.count()
+        self._next_qid = 0
 
     # ------------------------------------------------------------------ #
-    def register(self, query: QueryGraph, window: int) -> int:
-        plan = compile_plan(
+    def compile(self, query: QueryGraph, window: int,
+                decomposition=None) -> ExecutionPlan:
+        """Compile with this registry's uniform capacities (host-side).
+
+        ``decomposition``: optional ordered timing sequences (the
+        ``plan_decomposition`` form) to reproduce an exact plan instead
+        of re-running the decomposition/join-order heuristics.
+        """
+        if decomposition is not None:
+            decomposition = [
+                TCSubquery(frozenset(seq), tuple(seq))
+                for seq in decomposition
+            ]
+        return compile_plan(
             query, window,
+            decomposition=decomposition,
             level_capacity=self.level_capacity,
             l0_capacity=self.l0_capacity,
             max_new=self.max_new,
         )
-        qid = next(self._next_qid)
+
+    def register(self, query: QueryGraph, window: int,
+                 plan: ExecutionPlan | None = None) -> int:
+        """Register a standing query; with ``plan`` given, serve that
+        EXACT plan (custom decomposition / capacities) instead of
+        compiling one."""
+        if plan is None:
+            plan = self.compile(query, window)
+        elif plan.query != query or plan.window != window:
+            raise ValueError("plan does not match the given query/window")
+        else:
+            # capacities must be the registry's: checkpoint restore
+            # recompiles from (query, window, decomposition) with the
+            # registry's capacities, so divergent ones would not
+            # round-trip (and would fragment slot groups for no benefit)
+            level_caps = {(lv.capacity, lv.max_new)
+                          for s in plan.subqueries for lv in s.levels}
+            l0_caps = {(js.capacity, js.max_new) for js in plan.l0_joins}
+            if level_caps != {(self.level_capacity, self.max_new)} or \
+                    (l0_caps and
+                     l0_caps != {(self.l0_capacity, self.max_new)}):
+                raise ValueError(
+                    "plan capacities differ from the registry's "
+                    f"(level={self.level_capacity}, l0={self.l0_capacity}, "
+                    f"max_new={self.max_new})")
+        qid = self._next_qid
+        self._next_qid += 1
         self._queries[qid] = RegisteredQuery(
             qid=qid, query=query, window=window, plan=plan,
             signature=plan_signature(plan),
         )
         return qid
 
+    def adopt(self, qid: int, query: QueryGraph, window: int,
+              decomposition=None) -> RegisteredQuery:
+        """Re-insert a query under a FIXED qid (checkpoint-restore path):
+        the restored service must hand tenants back their original ids.
+        Bumps the qid allocator past ``qid`` so later ``register`` calls
+        stay collision-free."""
+        if qid in self._queries:
+            raise ValueError(f"qid {qid} already registered")
+        plan = self.compile(query, window, decomposition=decomposition)
+        rq = RegisteredQuery(
+            qid=qid, query=query, window=window, plan=plan,
+            signature=plan_signature(plan),
+        )
+        self._queries[qid] = rq
+        self._next_qid = max(self._next_qid, qid + 1)
+        return rq
+
     def unregister(self, qid: int) -> RegisteredQuery:
         return self._queries.pop(qid)
+
+    @property
+    def next_qid(self) -> int:
+        return self._next_qid
 
     # ------------------------------------------------------------------ #
     def get(self, qid: int) -> RegisteredQuery:

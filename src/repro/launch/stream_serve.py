@@ -1,62 +1,144 @@
-"""Continuous-query serving driver for the streaming engine.
+"""Single-query serving driver — a thin wrapper over the unified path.
 
-The production loop: register continuous queries (compiled once), then
-ingest edges tick by tick with adaptive batch coalescing (straggler /
-backpressure control) and periodic state checkpoints (fault tolerance:
-a restarted server restores its expansion lists and misses nothing that
-is still inside the window).
+There is ONE serving loop in this codebase:
+``repro.runtime.service.ContinuousSearchService``.  ``StreamServer``
+keeps the historical single-query API (construct from an ExecutionPlan,
+feed DataEdge lists, get an ``on_match`` callback) but builds no ticks
+and owns no loop of its own: it registers its one query as a tenant of
+a one-slot service and delegates ingest — adaptive tick coalescing,
+periodic async checkpoints, power-of-two batch padding — to
+``serve_stream``.
+
+Fault tolerance comes from the service layer too: with ``ckpt_dir`` set,
+a restarted ``StreamServer`` restores the full service (expansion lists,
+tick/edge counters) from the newest usable checkpoint — torn files are
+skipped — and misses nothing that is still inside the window.
 """
 
 from __future__ import annotations
 
-import time
-
-import numpy as np
-import jax
-
-from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
-from repro.core.engine import build_tick
-from repro.core.plan import ExecutionPlan, compile_plan
-from repro.core.state import init_state, make_batch
+from repro.checkpoint import (
+    CheckpointError,
+    checkpoint_steps,
+    latest_step,
+    load_manifest,
+)
+from repro.core import join as J
+from repro.core.plan import ExecutionPlan
+from repro.core.registry import plan_decomposition
+from repro.runtime.service import ContinuousSearchService
 from repro.runtime.straggler import TickCoalescer
-from repro.stream.generator import to_batches
 
 
 class StreamServer:
-    def __init__(self, plan: ExecutionPlan, ckpt_dir: str | None = None,
-                 extract_matches: bool = True):
-        self.plan = plan
-        self.tick = jax.jit(build_tick(plan, extract_matches=extract_matches))
-        self.state = init_state(plan)
-        self.coalescer = TickCoalescer(batch=64)
-        self.ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
-        self.ticks = 0
-        if ckpt_dir and (last := latest_step(ckpt_dir)) is not None:
-            self.state = restore_checkpoint(ckpt_dir, last, self.state)
-            self.ticks = last
+    """One standing query served through ``ContinuousSearchService``."""
 
-    def ingest(self, edges: list, on_match=None, ckpt_every: int = 0):
-        """Feed DataEdges; returns total new matches reported."""
-        total = 0
-        i = 0
-        batch_size = self.coalescer.batch
-        while i < len(edges):
-            chunk = edges[i:i + batch_size]
-            i += len(chunk)
-            b = to_batches(chunk, len(chunk))[0]
-            t0 = time.perf_counter()
-            self.state, res = self.tick(self.state, make_batch(**b))
-            n_new = int(res.n_new_matches)
-            total += n_new
-            if n_new and on_match is not None:
-                valid = np.asarray(res.match_valid)
-                on_match(np.asarray(res.match_bindings)[valid],
-                         np.asarray(res.match_ets)[valid])
-            self.ticks += 1
-            lat_ms = (time.perf_counter() - t0) * 1e3
-            batch_size = self.coalescer.record(lat_ms, len(edges) - i)
-            if self.ckpt and ckpt_every and self.ticks % ckpt_every == 0:
-                self.ckpt.save(self.ticks, self.state)
-        if self.ckpt:
-            self.ckpt.wait()
-        return total
+    def __init__(self, plan: ExecutionPlan, ckpt_dir: str | None = None,
+                 extract_matches: bool | None = None,
+                 backend: str | None = None,
+                 tick_cache=None):
+        """``backend`` / ``extract_matches`` left unset mean: use the
+        checkpointed values when restoring (REF / True when starting
+        fresh) — passing them explicitly overrides either way."""
+        lv = plan.subqueries[0].levels[0]
+        l0_cap = plan.l0_joins[0].capacity if plan.l0_joins else lv.capacity
+        self._coalescer = None       # AIMD state, persistent across ingests
+        if ckpt_dir and checkpoint_steps(ckpt_dir):
+            try:
+                # restore validates (hashes) the chosen step exactly once
+                self.service = ContinuousSearchService.restore(
+                    ckpt_dir, tick_cache=tick_cache, backend=backend,
+                    extract_matches=extract_matches)
+            except CheckpointError as e:
+                # fail loudly rather than silently starting fresh: a
+                # fresh start here would break the miss-nothing guarantee
+                last = latest_step(ckpt_dir)
+                if last is not None and \
+                        "service" not in load_manifest(ckpt_dir, last):
+                    raise ValueError(
+                        f"ckpt_dir {ckpt_dir!r} holds checkpoints without "
+                        "a service manifest (legacy StreamServer or "
+                        "foreign writer); clear the directory or restore "
+                        "it manually") from e
+                raise CheckpointError(
+                    f"ckpt_dir {ckpt_dir!r} contains checkpoints but none "
+                    "are usable (all torn/partial)") from e
+            qids = self.service.registry.qids()
+            if len(qids) != 1:
+                raise ValueError(
+                    f"checkpoint under {ckpt_dir!r} holds {len(qids)} "
+                    "queries; restore it as a ContinuousSearchService")
+            self.qid = qids[0]
+            rq = self.service.registry.get(self.qid)
+            if rq.query != plan.query or rq.window != plan.window:
+                raise ValueError(
+                    f"checkpoint under {ckpt_dir!r} holds a different "
+                    f"query/window (checkpointed window={rq.window}, "
+                    f"requested {plan.window})")
+            # capacity / decomposition drift must be loud too: restore
+            # always serves the checkpointed plan, so a caller who
+            # recompiled (e.g. grew capacities after overflow) must not
+            # silently keep the old tables
+            r_lv = rq.plan.subqueries[0].levels[0]
+            r_l0 = (rq.plan.l0_joins[0].capacity if rq.plan.l0_joins
+                    else r_lv.capacity)
+            if (r_lv.capacity, r_lv.max_new, r_l0) != \
+                    (lv.capacity, lv.max_new, l0_cap) or \
+                    plan_decomposition(rq.plan) != plan_decomposition(plan):
+                raise ValueError(
+                    f"checkpoint under {ckpt_dir!r} was written with "
+                    "different plan capacities or decomposition; clear "
+                    "the directory to serve the new plan from scratch")
+        else:
+            self.service = ContinuousSearchService(
+                slots_per_group=1,
+                level_capacity=lv.capacity,
+                l0_capacity=l0_cap,
+                max_new=lv.max_new,
+                backend=J.JoinBackend.REF if backend is None else backend,
+                extract_matches=(True if extract_matches is None
+                                 else extract_matches),
+                ckpt_dir=ckpt_dir,
+                tick_cache=tick_cache,
+            )
+            # register the EXACT plan (a caller's custom decomposition
+            # must be served, not re-derived)
+            self.qid = self.service.register(plan.query, plan.window,
+                                             plan=plan)
+        self.plan = self.service.registry.get(self.qid).plan
+
+    # ------------------------------------------------------------------ #
+    @property
+    def state(self):
+        return self.service.state(self.qid)
+
+    @property
+    def ticks(self) -> int:
+        return self.service.n_ticks
+
+    @property
+    def resume_offset(self) -> int:
+        """Edges already consumed (slice your replay stream here after a
+        restore)."""
+        return self.service.n_edges_ingested
+
+    def matches(self):
+        return self.service.matches(self.qid)
+
+    # ------------------------------------------------------------------ #
+    def ingest(self, edges: list, on_match=None, ckpt_every: int = 0,
+               batch_size: int = 64):
+        """Feed DataEdges; returns total new matches reported.
+
+        The adaptive batch-size (AIMD) state persists across ``ingest``
+        calls, so a consumer feeding the server in repeated chunks keeps
+        the batch size it converged to (``batch_size`` only seeds the
+        first call)."""
+        if self._coalescer is None:
+            self._coalescer = TickCoalescer.seeded(batch_size)
+        cb = None if on_match is None else (
+            lambda qid, bindings, ets: on_match(bindings, ets))
+        totals = self.service.serve_stream(
+            edges, on_match=cb, ckpt_every=ckpt_every,
+            coalescer=self._coalescer)
+        return totals.get(self.qid, 0)

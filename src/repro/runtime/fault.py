@@ -14,7 +14,13 @@ from __future__ import annotations
 import logging
 from typing import Callable
 
-from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    CheckpointError,
+    checkpoint_steps,
+    restore_checkpoint,
+    validate_checkpoint,
+)
 
 log = logging.getLogger(__name__)
 
@@ -45,14 +51,21 @@ class FaultTolerantLoop:
         self.restarts = 0
 
     def _resume(self):
-        last = latest_step(self.ckpt_dir)
+        """Restore the newest USABLE checkpoint: torn/partial files (a
+        crash mid-write, a bad disk) are skipped, falling back to the
+        previous step rather than wedging recovery."""
         state = self.make_init_state()
-        if last is None:
-            return state, 0
-        state = restore_checkpoint(
-            self.ckpt_dir, last, state, self.mesh, self.specs)
-        log.info("restored checkpoint at step %d", last)
-        return state, last
+        for step in reversed(checkpoint_steps(self.ckpt_dir)):
+            try:
+                validate_checkpoint(self.ckpt_dir, step)
+                restored = restore_checkpoint(
+                    self.ckpt_dir, step, state, self.mesh, self.specs)
+            except CheckpointError as e:
+                log.warning("skipping torn checkpoint step %d: %s", step, e)
+                continue
+            log.info("restored checkpoint at step %d", step)
+            return restored, step
+        return state, 0
 
     def run(self, n_steps: int):
         while True:

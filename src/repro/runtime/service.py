@@ -1,55 +1,99 @@
-"""Continuous-search service: register / unregister / ingest.
+"""Continuous-search service: the unified serving path for standing queries.
 
-The serving front-end for the multi-query engine (repro.core.multi).
-Standing queries arrive and leave while the edge stream flows; the
-service keeps the compile budget fixed by bucketing queries into padded
-slot groups keyed by structural signature:
+This is THE serving front-end for the engine — single-query and
+multi-tenant alike (``repro.launch.stream_serve.StreamServer`` is now a
+thin one-tenant wrapper over this class).  Standing queries arrive and
+leave while the edge stream flows; the service keeps the compile budget
+fixed by bucketing queries into padded slot groups keyed by structural
+signature, and owns the whole production loop: adaptive tick coalescing,
+periodic async checkpoints, and fault-tolerant restore.
 
+Registration / compile budget
+-----------------------------
 * ``register(query, window)`` compiles the query's ExecutionPlan (host-
   side numpy, cheap), looks up its structural signature
   (``repro.core.registry.plan_signature``), and arms a free slot in an
   existing group — a pure device-data write, **no XLA recompilation**.
-  Only a never-seen structure (or an overflowing group) triggers one
-  ``build_slot_tick`` compile, which then serves ``slots_per_group``
-  queries of that shape; ``n_compiles`` counts these for observability.
+  Compiled slot ticks live in a process-wide ``SlotTickCache`` keyed by
+  signature, so even a never-seen *group* (overflow, or a restored
+  server) only compiles when the *structure* is new to the process;
+  ``n_compiles`` counts those builds for observability.
 * ``unregister(qid)`` disarms the slot (again data-only).
-* ``ingest(batch)`` advances every group's fused tick once and returns
-  ``{qid: TickResult}`` for the registered queries.
 
-Batches must keep a fixed shape (pad the tail; ``to_batches`` does) —
-a new batch size re-specializes the jitted ticks, as usual under JAX.
+Serving
+-------
+* ``ingest(batch)`` advances every group's fused tick once and returns
+  ``{qid: TickResult}`` — the low-level fixed-batch API.  Batches must
+  keep a fixed shape (pad the tail; ``to_batches`` does) — a new batch
+  size re-specializes the jitted ticks, as usual under JAX.
+* ``serve_stream(edges, ...)`` is the production loop over a DataEdge
+  list: a ``TickCoalescer`` adapts the chunk size to the measured
+  per-tick barrier latency and queue depth (all groups dispatch
+  asynchronously and meet at one barrier, so the slowest group
+  inherently sets the pace — backpressure), chunks are padded to
+  power-of-two shapes (``quantize_pow2``) to bound jit
+  specializations, matches stream out through
+  ``on_match(qid, bindings, ets)``, and every ``ckpt_every`` ticks the
+  full service state is checkpointed asynchronously.
+* With the default ``donate=True``, slot ticks are jitted with
+  ``donate_argnums=(0,)``: each tick consumes the previous ``SlotState``
+  buffers in place instead of copying the tables every tick.
+
+Fault tolerance
+---------------
+``checkpoint()`` snapshots every group's ``SlotState`` pytree through
+``repro.checkpoint.AsyncCheckpointer`` plus a JSON manifest of the whole
+registry (qid -> query/window, slot layout, structural templates,
+counters).  ``ContinuousSearchService.restore(ckpt_dir)`` rebuilds the
+full multi-tenant server from the newest *usable* checkpoint — torn or
+partial files are skipped — re-registering every query into the same
+slot layout with the same qids, and re-arming the compiled ticks from
+the ``SlotTickCache`` (zero recompiles for structures this process has
+already served).  By the paper's timing-order semantics a restored
+server misses nothing still inside the window: the differential test
+(tests/test_service_restore.py) proves crash + restore reports exactly
+the same match set as an uninterrupted run.
 
 ``backend`` selects the compatibility-join implementation for every
 group's slot tick: ``JoinBackend.REF`` (pure jnp), ``PALLAS`` (fused
-TPU kernels — one stacked 3-D-grid join per slot group, per-slot
-windows as scalar-prefetch inputs, on-chip pair extraction), or
-``PALLAS_INTERPRET`` (the kernels interpreted on CPU, for validation).
-Registration stays a pure data write under all backends.  Note the
-compiled ``PALLAS`` path is interpret-parity-tested only (CI has no
-TPU); validate on hardware before serving with it (ROADMAP.md).
+TPU kernels), or ``PALLAS_INTERPRET`` (the kernels interpreted on CPU,
+for validation).  The compiled ``PALLAS`` path is interpret-parity-
+tested only (CI has no TPU); validate on hardware before serving with
+it (ROADMAP.md).
 
 Example
 -------
-    svc = ContinuousSearchService()
+    svc = ContinuousSearchService(ckpt_dir="/ckpts")
     q1 = svc.register(chain_query, window=50)
-    for b in to_batches(stream, 64):
-        results = svc.ingest(make_batch(**b))
-        if int(results[q1].n_new_matches):
-            ...  # alert
-    svc.unregister(q1)
+    svc.serve_stream(edges, on_match=alert, ckpt_every=50)
+    ...                                    # crash? restart:
+    svc = ContinuousSearchService.restore("/ckpts")
+    svc.serve_stream(edges[svc.n_edges_ingested:], on_match=alert)
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    CheckpointError,
+    checkpoint_steps,
+    load_manifest,
+    restore_checkpoint,
+    validate_checkpoint,
+)
 from repro.core import join as J
 from repro.core.multi import (
+    GLOBAL_SLOT_TICK_CACHE,
     SlotState,
-    build_slot_tick,
+    SlotTickCache,
     clear_slot,
     init_slot_state,
     read_slot,
@@ -58,16 +102,33 @@ from repro.core.multi import (
 from repro.core.engine import TickResult, current_matches
 from repro.core.plan import ExecutionPlan
 from repro.core.query import QueryGraph
-from repro.core.registry import QueryRegistry
+from repro.core.registry import (
+    QueryRegistry,
+    plan_decomposition,
+    plan_signature,
+)
 from repro.core.state import EdgeBatch, EngineState, init_state, make_batch
+from repro.runtime.straggler import TickCoalescer, quantize_pow2
+from repro.stream.generator import to_batches
+
+
+class ServeInfo(NamedTuple):
+    """Per-tick observability record passed to ``serve_stream``'s
+    ``on_tick`` callback (after state update and any checkpoint)."""
+
+    tick: int               # cumulative tick count (checkpoint step id)
+    n_edges_ingested: int   # cumulative edges consumed after this tick
+    chunk: int              # edges consumed by this tick
+    latency_ms: float       # barrier latency of this tick (all groups)
 
 
 @dataclass(eq=False)       # identity semantics: fields hold device arrays
 class _Group:
-    """One compiled slot tick + its device state and slot ownership."""
+    """One slot group: compiled tick + device state + slot ownership."""
 
+    gid: int                          # stable id (checkpoint manifest key)
     template: ExecutionPlan
-    tick: object                      # jitted slot tick
+    tick: object                      # jitted slot tick (SlotTickCache-shared)
     sstate: SlotState
     empty: EngineState                # cached init_state(template) for churn
     qids: list = field(default_factory=list)   # qid | None per slot
@@ -77,6 +138,10 @@ class _Group:
             if qid is None:
                 return k
         return None
+
+    @property
+    def idle(self) -> bool:
+        return all(q is None for q in self.qids)
 
 
 class ContinuousSearchService:
@@ -92,6 +157,10 @@ class ContinuousSearchService:
         extract_matches: bool = True,
         max_out: int | None = None,
         jit: bool = True,
+        donate: bool = True,
+        ckpt_dir: str | None = None,
+        keep_checkpoints: int = 8,
+        tick_cache: SlotTickCache | None = None,
     ):
         if backend not in (J.JoinBackend.REF, J.JoinBackend.PALLAS,
                            J.JoinBackend.PALLAS_INTERPRET):
@@ -101,42 +170,65 @@ class ContinuousSearchService:
         self.extract_matches = extract_matches
         self.max_out = max_out
         self._jit = jit
+        self.donate = donate and jit
+        self.tick_cache = (GLOBAL_SLOT_TICK_CACHE if tick_cache is None
+                           else tick_cache)
+        self.ckpt_dir = ckpt_dir
+        self.keep_checkpoints = keep_checkpoints
+        self.ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
         self.registry = QueryRegistry(
             level_capacity=level_capacity, l0_capacity=l0_capacity,
             max_new=max_new)
         self._groups: dict[tuple, list[_Group]] = {}
         self._location: dict[int, tuple[_Group, int]] = {}
-        self.n_compiles = 0          # build_slot_tick invocations (observability)
+        self._next_gid = 0
+        self._ckpt_step = 0          # last step id written (monotonic)
+        self.n_compiles = 0          # build_slot_tick cache misses (this service)
         self.n_edges_ingested = 0
+        self.n_ticks = 0
 
     # ------------------------------------------------------------------ #
     @property
     def n_active(self) -> int:
         return len(self._location)
 
+    def _iter_groups(self) -> list[_Group]:
+        """All groups in stable gid order (manifest / serving order)."""
+        return sorted((g for gs in self._groups.values() for g in gs),
+                      key=lambda g: g.gid)
+
     def _new_group(self, template: ExecutionPlan) -> _Group:
-        tick = build_slot_tick(
+        before = self.tick_cache.n_builds
+        tick = self.tick_cache.get(
             template, backend=self.backend,
-            extract_matches=self.extract_matches, max_out=self.max_out)
-        if self._jit:
-            tick = jax.jit(tick)
-        self.n_compiles += 1
-        return _Group(
+            extract_matches=self.extract_matches, max_out=self.max_out,
+            jit=self._jit, donate=self.donate)
+        self.n_compiles += self.tick_cache.n_builds - before
+        g = _Group(
+            gid=self._next_gid,
             template=template,
             tick=tick,
             sstate=init_slot_state(template, self.slots_per_group),
             empty=init_state(template),
             qids=[None] * self.slots_per_group,
         )
+        self._next_gid += 1
+        return g
 
     # ------------------------------------------------------------------ #
-    def register(self, query: QueryGraph, window: int) -> int:
+    def register(self, query: QueryGraph, window: int,
+                 plan: ExecutionPlan | None = None) -> int:
         """Add a standing query; returns its qid.
 
-        Recompile-free when a group of the same structural signature has
-        a free slot; otherwise compiles one new group for the signature.
+        Always a pure data write when a group with the same structural
+        signature has a free slot; an overflowing (or never-seen)
+        structure allocates one new group, whose compiled tick comes
+        from the process-wide ``SlotTickCache`` — only a structure new
+        to the whole process actually compiles.  Pass ``plan`` to serve
+        an exact pre-compiled plan (custom decomposition) instead of
+        letting the registry compile one.
         """
-        qid = self.registry.register(query, window)
+        qid = self.registry.register(query, window, plan=plan)
         rq = self.registry.get(qid)
         groups = self._groups.setdefault(rq.signature, [])
         group = next((g for g in groups if g.free_slot() is not None), None)
@@ -155,31 +247,30 @@ class ContinuousSearchService:
 
         A group whose slots all become empty is released, except that one
         idle group per structural signature is kept warm so a tenant of a
-        recently-seen structure can re-register without recompiling.  Use
-        ``drop_idle_groups()`` to reclaim the warm groups too.
+        recently-seen structure can re-register without re-initializing
+        device tables.  Use ``drop_idle_groups()`` to reclaim the warm
+        groups too (the compiled tick itself stays in the SlotTickCache).
         """
         group, k = self._location.pop(qid)
         group.sstate = clear_slot(group.sstate, group.template, k,
                                   empty=group.empty)
         group.qids[k] = None
         self.registry.unregister(qid)
-        if all(q is None for q in group.qids):
+        if group.idle:
             rq_sig = next(
                 sig for sig, gs in self._groups.items() if group in gs)
             siblings = self._groups[rq_sig]
-            n_idle = sum(
-                1 for g in siblings if all(q is None for q in g.qids))
+            n_idle = sum(1 for g in siblings if g.idle)
             if n_idle > 1:
                 siblings.remove(group)
 
     def drop_idle_groups(self) -> int:
-        """Release all fully-empty slot groups (compiled ticks + device
-        tables); returns how many were dropped.  Re-registering a dropped
-        structure recompiles one group."""
+        """Release all fully-empty slot groups (device tables); returns
+        how many were dropped.  Compiled ticks stay cached, so
+        re-registering a dropped structure re-allocates tables only."""
         dropped = 0
         for sig in list(self._groups):
-            keep = [g for g in self._groups[sig]
-                    if any(q is not None for q in g.qids)]
+            keep = [g for g in self._groups[sig] if not g.idle]
             dropped += len(self._groups[sig]) - len(keep)
             if keep:
                 self._groups[sig] = keep
@@ -188,6 +279,13 @@ class ContinuousSearchService:
         return dropped
 
     # ------------------------------------------------------------------ #
+    def _advance_group(self, g: _Group, batch: EdgeBatch):
+        """One fused tick for one group.  With ``donate`` the previous
+        sstate buffers are consumed — ``g.sstate`` is rebound before this
+        returns, so no caller can observe the donated state."""
+        g.sstate, res = g.tick(g.sstate, batch)
+        return res
+
     def ingest(self, batch) -> dict[int, TickResult]:
         """Advance all standing queries by one batch of stream edges.
 
@@ -198,18 +296,269 @@ class ContinuousSearchService:
         if not isinstance(batch, EdgeBatch):
             batch = make_batch(**batch)
         out: dict[int, TickResult] = {}
-        for groups in self._groups.values():
-            for g in groups:
-                if all(q is None for q in g.qids):
-                    continue
-                g.sstate, res = g.tick(g.sstate, batch)
-                for k, qid in enumerate(g.qids):
-                    if qid is not None:
-                        out[qid] = jax.tree.map(lambda x, k=k: x[k], res)
+        for g in self._iter_groups():
+            if g.idle:
+                continue
+            res = self._advance_group(g, batch)
+            for k, qid in enumerate(g.qids):
+                if qid is not None:
+                    out[qid] = jax.tree.map(lambda x, k=k: x[k], res)
+        self.n_ticks += 1
         # count on host: batch.valid is a concrete input array, so this
         # adds no sync point against the async tick dispatches above
         self.n_edges_ingested += int(np.asarray(batch.valid).sum())
         return out
+
+    # ------------------------------------------------------------------ #
+    def serve_stream(
+        self,
+        edges: list,
+        on_match=None,
+        on_tick=None,
+        ckpt_every: int = 0,
+        batch_size: int = 64,
+        min_batch: int | None = None,
+        max_batch: int | None = None,
+        target_latency_ms: float = 50.0,
+        coalescer: TickCoalescer | None = None,
+        final_checkpoint: bool = True,
+    ) -> dict[int, int]:
+        """Drive the service over a DataEdge list (the production loop).
+
+        One ``TickCoalescer`` adapts the chunk size to the measured tick
+        latency and queue depth; chunks are padded to power-of-two
+        shapes so the adaptive sizes produce a bounded set of jit
+        specializations.  Group ticks dispatch asynchronously and the
+        loop blocks ONCE per tick: the measured latency is the barrier
+        every group experiences, so the slowest group inherently sets
+        the pace (backpressure).  ``on_match(qid, bindings, ets)`` fires
+        for each tenant's new matches; ``on_tick(ServeInfo)`` fires
+        after each tick's state update (and checkpoint, if due) — an
+        exception raised from it leaves the last checkpoint consistent,
+        which is how the crash/restore tests inject failures.  With
+        ``ckpt_dir`` set and ``ckpt_every > 0`` the full service state
+        is checkpointed asynchronously every that-many ticks, plus once
+        at the end of the call if ticks advanced past the last written
+        step (so returning implies the served span is durable); pending
+        writes are flushed before returning.  A consumer feeding the
+        stream in many small calls can pass ``final_checkpoint=False``
+        to keep strictly-every-``ckpt_every`` cadence.
+
+        Pass ``coalescer`` to carry AIMD state across calls (a consumer
+        feeding the stream in repeated ``serve_stream`` invocations
+        keeps its converged batch size); the batch_size/bounds/latency
+        arguments then have no effect.
+
+        Returns ``{qid: total new matches}`` over the served span.
+        """
+        if on_match is not None and not self.extract_matches:
+            raise ValueError(
+                "on_match requires a service with extract_matches=True")
+        if ckpt_every and self.ckpt is None:
+            raise ValueError(
+                "ckpt_every requires a service with ckpt_dir set — "
+                "without it every checkpoint would be a silent no-op")
+        if coalescer is None:
+            coalescer = TickCoalescer.seeded(
+                batch_size, min_batch, max_batch, target_latency_ms)
+
+        totals: dict[int, int] = {}
+        i, n = 0, len(edges)
+        while i < n:
+            active = [g for g in self._iter_groups() if not g.idle]
+            chunk = edges[i:i + coalescer.batch]
+            batch = make_batch(
+                **to_batches(chunk, quantize_pow2(len(chunk)))[0])
+            queue_depth = n - (i + len(chunk))
+            t0 = time.perf_counter()
+            results = [(g, self._advance_group(g, batch)) for g in active]
+            jax.block_until_ready([g.sstate for g in active])   # the barrier
+            lat_ms = (time.perf_counter() - t0) * 1e3
+            coalescer.record(lat_ms, queue_depth)
+            for g, res in results:
+                for k, qid in enumerate(g.qids):
+                    if qid is None:
+                        continue
+                    r = jax.tree.map(lambda x, k=k: x[k], res)
+                    n_new = int(r.n_new_matches)
+                    totals[qid] = totals.get(qid, 0) + n_new
+                    if n_new and on_match is not None:
+                        valid = np.asarray(r.match_valid)
+                        on_match(qid,
+                                 np.asarray(r.match_bindings)[valid],
+                                 np.asarray(r.match_ets)[valid])
+            i += len(chunk)
+            self.n_ticks += 1
+            self.n_edges_ingested += len(chunk)
+            if self.ckpt and ckpt_every and self.n_ticks % ckpt_every == 0:
+                self.checkpoint()
+            if on_tick is not None:
+                on_tick(ServeInfo(
+                    tick=self.n_ticks,
+                    n_edges_ingested=self.n_edges_ingested,
+                    chunk=len(chunk),
+                    latency_ms=lat_ms,
+                ))
+        if self.ckpt:
+            if ckpt_every and final_checkpoint and \
+                    self.n_ticks % ckpt_every != 0 and \
+                    self.n_ticks > self._ckpt_step:
+                self.checkpoint()       # final end-of-call durability
+            self.ckpt.wait()
+        return totals
+
+    # ------------------------------------------------------------------ #
+    # checkpoint / restore
+    # ------------------------------------------------------------------ #
+    def _manifest(self) -> dict:
+        """JSON-serializable description of everything that is NOT a
+        device array: config, registry, slot layout, counters."""
+        return {
+            "config": {
+                "slots_per_group": self.slots_per_group,
+                "level_capacity": self.registry.level_capacity,
+                "l0_capacity": self.registry.l0_capacity,
+                "max_new": self.registry.max_new,
+                "backend": self.backend,
+                "extract_matches": self.extract_matches,
+                "max_out": self.max_out,
+                "jit": self._jit,
+                "donate": self.donate,
+                "keep_checkpoints": self.keep_checkpoints,
+            },
+            "queries": {
+                str(qid): {
+                    "query": self.registry.get(qid).query.to_spec(),
+                    "window": int(self.registry.get(qid).window),
+                    # exact plan round-trip: restore bypasses the
+                    # decomposition heuristics (custom plans survive)
+                    "decomposition": [
+                        list(seq) for seq in
+                        plan_decomposition(self.registry.get(qid).plan)
+                    ],
+                }
+                for qid in self.registry.qids()
+            },
+            "groups": [
+                {
+                    "gid": g.gid,
+                    "template_query": g.template.query.to_spec(),
+                    "template_window": int(g.template.window),
+                    "template_decomposition": [
+                        list(seq) for seq in plan_decomposition(g.template)
+                    ],
+                    "qids": list(g.qids),
+                }
+                for g in self._iter_groups()
+            ],
+            "counters": {
+                "n_edges_ingested": int(self.n_edges_ingested),
+                "n_ticks": int(self.n_ticks),
+                "next_qid": int(self.registry.next_qid),
+            },
+        }
+
+    def checkpoint(self, step: int | None = None):
+        """Snapshot all groups' ``SlotState`` pytrees + the service
+        manifest, asynchronously.  Returns the writer future (call
+        ``self.ckpt.wait()`` to block on durability).
+
+        Step ids are strictly monotonic even when the tick count has not
+        advanced (e.g. a registry-only change checkpointed twice at the
+        same tick): overwriting an existing step would put previously
+        durable state at risk if a crash tore the rewrite.
+        """
+        if self.ckpt is None:
+            raise ValueError("service was constructed without ckpt_dir")
+        if step is None:
+            step = max(self.n_ticks, self._ckpt_step + 1)
+        self._ckpt_step = max(self._ckpt_step, step)
+        tree = {str(g.gid): g.sstate for g in self._iter_groups()}
+        return self.ckpt.save(step, tree,
+                              extra={"service": self._manifest()},
+                              keep_last=self.keep_checkpoints)
+
+    @classmethod
+    def restore(
+        cls,
+        ckpt_dir: str,
+        step: int | None = None,
+        tick_cache: SlotTickCache | None = None,
+        backend: str | None = None,
+        extract_matches: bool | None = None,
+    ) -> "ContinuousSearchService":
+        """Rebuild a full multi-tenant service from a checkpoint.
+
+        Uses the newest *usable* checkpoint (or ``step`` if given) —
+        torn/partial checkpoints are skipped, falling back to the
+        previous one.  Every query is re-registered under its original
+        qid into its original slot, the structural templates are
+        recompiled host-side, and the compiled slot ticks come from the
+        ``SlotTickCache``: a structure this process has already served
+        restores with zero recompiles.
+
+        ``backend`` / ``extract_matches`` override the checkpointed
+        config (both are serving-behavior knobs, independent of the
+        persisted state layout); by default the checkpointed values are
+        kept.
+        """
+        candidates = ([step] if step is not None
+                      else list(reversed(checkpoint_steps(ckpt_dir))))
+        overrides = {}
+        if backend is not None:
+            overrides["backend"] = backend
+        if extract_matches is not None:
+            overrides["extract_matches"] = extract_matches
+        last_err: CheckpointError | None = None
+        for s in candidates:
+            try:
+                return cls._restore_step(ckpt_dir, s, tick_cache, overrides)
+            except CheckpointError as e:
+                last_err = e
+        raise CheckpointError(
+            f"no usable service checkpoint under {ckpt_dir!r}") from last_err
+
+    @classmethod
+    def _restore_step(cls, ckpt_dir, step, tick_cache, overrides):
+        validate_checkpoint(ckpt_dir, step)   # torn pair / file -> skip
+        man = load_manifest(ckpt_dir, step)
+        if "service" not in man:
+            raise CheckpointError(
+                f"step {step}: not a ContinuousSearchService checkpoint")
+        man = man["service"]
+        svc = cls(ckpt_dir=ckpt_dir, tick_cache=tick_cache,
+                  **{**man["config"], **overrides})
+        for qid_s, ent in man["queries"].items():
+            svc.registry.adopt(
+                int(qid_s), QueryGraph.from_spec(ent["query"]),
+                int(ent["window"]),
+                decomposition=ent.get("decomposition"))
+        like = {}
+        for gspec in man["groups"]:
+            template = svc.registry.compile(
+                QueryGraph.from_spec(gspec["template_query"]),
+                int(gspec["template_window"]),
+                decomposition=gspec.get("template_decomposition"))
+            g = svc._new_group(template)
+            g.gid = int(gspec["gid"])
+            g.qids = [None if q is None else int(q) for q in gspec["qids"]]
+            svc._groups.setdefault(plan_signature(template), []).append(g)
+            for k, qid in enumerate(g.qids):
+                if qid is not None:
+                    svc._location[qid] = (g, k)
+            like[str(g.gid)] = g.sstate
+        svc._next_gid = 1 + max(
+            (g["gid"] for g in man["groups"]), default=-1)
+        restored = restore_checkpoint(ckpt_dir, step, like)
+        for g in svc._iter_groups():
+            g.sstate = jax.tree.map(jnp.asarray, restored[str(g.gid)])
+        counters = man["counters"]
+        svc.n_edges_ingested = int(counters["n_edges_ingested"])
+        svc.n_ticks = int(counters["n_ticks"])
+        svc._ckpt_step = int(step)
+        svc.registry._next_qid = max(
+            svc.registry._next_qid, int(counters["next_qid"]))
+        return svc
 
     # ------------------------------------------------------------------ #
     def state(self, qid: int) -> EngineState:

@@ -9,12 +9,29 @@ size until table-join compute dominates (see benchmarks/bench_concurrency).
 
 ``TickCoalescer`` is a tiny AIMD controller over the tick batch size,
 mirroring how production stream processors (Flink/Dataflow) adapt bundle
-sizes.  Host-side logic: deterministic given its input trace, unit-tested.
+sizes.  Host-side logic: deterministic given its input trace, unit- and
+property-tested (tests/test_straggler_props.py).  The serving loop
+(``ContinuousSearchService.serve_stream``) feeds it the per-tick
+barrier latency — slot groups dispatch asynchronously and meet at one
+barrier, so the slowest group inherently sets the pace — with
+``quantize_pow2`` bounding how many distinct padded batch shapes (and
+therefore jit specializations) the adaptive sizes can produce.
 """
 
 from __future__ import annotations
 
 import dataclasses
+
+
+def quantize_pow2(n: int, lo: int = 8) -> int:
+    """Round a chunk length up to the next power of two, at least ``lo``.
+
+    Adaptive coalescing produces arbitrary chunk lengths; padding each to
+    the next power of two keeps the set of batch shapes (and thus jit
+    specializations per compiled tick) logarithmic in the batch range.
+    """
+    n = max(int(n), 1)
+    return max(lo, 1 << (n - 1).bit_length())
 
 
 @dataclasses.dataclass
@@ -24,6 +41,29 @@ class TickCoalescer:
     target_latency_ms: float = 50.0
     batch: int = 256
     _ema_latency: float = 0.0
+
+    def __post_init__(self):
+        if not (0 < self.min_batch <= self.max_batch):
+            raise ValueError(
+                f"need 0 < min_batch <= max_batch, got "
+                f"{self.min_batch}..{self.max_batch}")
+        self.batch = min(max(self.batch, self.min_batch), self.max_batch)
+
+    @classmethod
+    def seeded(cls, batch: int, min_batch: int | None = None,
+               max_batch: int | None = None,
+               target_latency_ms: float = 50.0) -> "TickCoalescer":
+        """Coalescer that honors ``batch`` as the starting size: unset
+        bounds are widened around it instead of clamping it to the
+        dataclass defaults (so a small requested batch is served as
+        requested, and a lone ``max_batch`` below the default
+        ``min_batch`` cannot conflict)."""
+        if max_batch is None:
+            max_batch = max(cls.max_batch, batch)
+        if min_batch is None:
+            min_batch = min(cls.min_batch, batch, max_batch)
+        return cls(batch=batch, min_batch=min_batch, max_batch=max_batch,
+                   target_latency_ms=target_latency_ms)
 
     def record(self, tick_latency_ms: float, queue_depth: int) -> int:
         """Report the last tick; returns the batch size for the next one."""

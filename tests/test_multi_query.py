@@ -9,6 +9,7 @@ import pytest
 from repro.core import compile_plan
 from repro.core.engine import build_tick, current_matches
 from repro.core.multi import (
+    SlotTickCache,
     build_multi_tick,
     init_multi_state,
     set_active,
@@ -150,25 +151,29 @@ def test_service_add_remove_mid_stream():
 
 
 def test_service_same_structure_does_not_recompile():
-    """Padded slots: a second query of an already-seen structural
-    signature is a pure data write — no new build_slot_tick compile."""
-    svc = ContinuousSearchService(slots_per_group=4, **CAP)
+    """Padded slots + the process-wide SlotTickCache: a second query of an
+    already-seen structural signature is a pure data write, and even a
+    group OVERFLOW reuses the cached compiled tick — only a never-seen
+    structure builds."""
+    tc = SlotTickCache()
+    svc = ContinuousSearchService(slots_per_group=4, tick_cache=tc, **CAP)
     qa = svc.register(chain_query(), window=20)
     assert svc.n_compiles == 1
     qb = svc.register(chain_query_relabeled(), window=35)
     assert svc.n_compiles == 1          # same structure: slot reuse
     qc = svc.register(star_query(), window=15)
     assert svc.n_compiles == 2          # new structure: one new group
-    # group overflow falls back to one more compile of the same template
+    # group overflow allocates a new group but REUSES the cached tick
     for _ in range(4):
         svc.register(chain_query(), window=20)
-    assert svc.n_compiles == 3
+    assert svc.n_compiles == tc.n_builds == 2
     assert svc.n_active == 7
+    assert len(svc._groups[svc.registry.get(qa).signature]) == 2
 
     # slots are reusable after unregister, again without compiling
     svc.unregister(qb)
     svc.register(chain_query_relabeled(), window=35)
-    assert svc.n_compiles == 3
+    assert svc.n_compiles == 2
 
     p_chain = compile_plan(chain_query(), 20, **CAP)
     p_rel = compile_plan(chain_query_relabeled(), 35, **CAP)
@@ -176,20 +181,46 @@ def test_service_same_structure_does_not_recompile():
 
 
 def test_service_idle_group_retention():
-    """Fully-empty groups are released, keeping one warm per signature
-    so recent structures re-register without compiling."""
-    svc = ContinuousSearchService(slots_per_group=1, **CAP)
+    """Fully-empty groups release their device tables, keeping one warm
+    per signature; compiled ticks outlive every group in the
+    SlotTickCache, so churn never rebuilds one."""
+    tc = SlotTickCache()
+    svc = ContinuousSearchService(slots_per_group=1, tick_cache=tc, **CAP)
     a = svc.register(chain_query(), window=20)
+    sig = svc.registry.get(a).signature
     b = svc.register(chain_query(), window=20)   # same sig, second group
-    assert svc.n_compiles == 2
+    assert svc.n_compiles == tc.n_builds == 1    # one build serves both
+    assert len(svc._groups[sig]) == 2
     svc.unregister(a)                            # first idle group: kept warm
     svc.unregister(b)                            # second idle group: released
+    assert len(svc._groups[sig]) == 1
     c = svc.register(chain_query(), window=20)
-    assert svc.n_compiles == 2                   # warm group reused
+    assert len(svc._groups[sig]) == 1            # warm group re-armed
     svc.unregister(c)
     assert svc.drop_idle_groups() == 1
-    svc.register(chain_query(), window=20)
-    assert svc.n_compiles == 3                   # dropped -> one recompile
+    assert sig not in svc._groups
+    svc.register(chain_query(), window=20)       # tables re-allocated ...
+    assert len(svc._groups[sig]) == 1
+    assert svc.n_compiles == tc.n_builds == 1    # ... but never recompiled
+
+
+def test_slot_tick_cache_lru_eviction():
+    """The tick cache is LRU-bounded; eviction never breaks live groups
+    (they hold their own tick references) — only a NEW group of an
+    evicted structure rebuilds."""
+    tc = SlotTickCache(max_entries=1)
+    svc = ContinuousSearchService(slots_per_group=2, tick_cache=tc, **CAP)
+    qa = svc.register(chain_query(), window=20)
+    svc.register(star_query(), window=15)     # evicts the chain tick
+    assert len(tc) == 1 and tc.n_builds == 2
+    stream = small_stream(40, n_vertices=8, seed=30)
+    for b in to_batches(stream, 8):
+        svc.ingest(b)                         # both groups still serve
+    assert int(svc.stats(qa).n_edges_processed) == len(stream)
+    svc.register(chain_query(), window=25)    # free slot: no cache lookup
+    assert tc.n_builds == 2
+    svc.register(chain_query(), window=30)    # overflow: rebuild evicted
+    assert tc.n_builds == 3 and len(tc) == 1
 
 
 def test_service_results_match_single_engines():

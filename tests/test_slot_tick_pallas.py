@@ -16,6 +16,7 @@ from repro.core import compile_plan
 from repro.core.engine import build_tick, current_matches
 from repro.core.join import JoinBackend
 from repro.core.multi import (
+    SlotTickCache,
     build_slot_tick,
     init_slot_state,
     read_slot,
@@ -163,7 +164,8 @@ def test_service_pallas_register_does_not_recompile():
     pure data write: no new build_slot_tick group, and the group's jit
     cache stays at one entry across windows and slot churn."""
     svc = ContinuousSearchService(
-        slots_per_group=4, backend=JoinBackend.PALLAS_INTERPRET, **CAP)
+        slots_per_group=4, backend=JoinBackend.PALLAS_INTERPRET,
+        tick_cache=SlotTickCache(), **CAP)
     qa = svc.register(chain_query(), window=20)
     assert svc.n_compiles == 1
     svc.register(chain_query_relabeled(), window=35)   # new labels+window

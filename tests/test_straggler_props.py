@@ -1,0 +1,99 @@
+"""Property tests (hypothesis) for the serving loop's batching controls:
+
+1. ``TickCoalescer.record`` keeps the batch inside [min_batch, max_batch]
+   under ANY latency/queue trace, and each step moves it by at most the
+   AIMD factors (×2 up, ×0.8 down);
+2. single-step monotonicity: an overloaded tick never grows the batch,
+   a fast tick with a deep queue never shrinks it;
+3. sustained extremes converge: persistent overload drives the batch to
+   ``min_batch``, persistent headroom with a deep queue to ``max_batch``;
+4. ``quantize_pow2`` (the serve-loop's jit-specialization bound) returns
+   a power of two ≥ the chunk length, within 2x of it.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.straggler import TickCoalescer, quantize_pow2
+
+latencies = st.floats(0.0, 10_000.0, allow_nan=False, allow_infinity=False)
+depths = st.integers(0, 10**9)
+traces = st.lists(st.tuples(latencies, depths), min_size=1, max_size=200)
+
+
+@settings(max_examples=200, deadline=None)
+@given(trace=traces)
+def test_batch_always_bounded(trace):
+    c = TickCoalescer()
+    for lat, depth in trace:
+        b = c.record(lat, depth)
+        assert c.min_batch <= b <= c.max_batch
+        assert b == c.batch
+
+
+@settings(max_examples=200, deadline=None)
+@given(trace=traces)
+def test_step_change_is_aimd_bounded(trace):
+    """One record() moves the batch by at most ×2 up / ×0.8 down."""
+    c = TickCoalescer()
+    for lat, depth in trace:
+        before = c.batch
+        after = c.record(lat, depth)
+        assert after <= max(2 * before, c.min_batch)
+        assert after >= min(int(0.8 * before), c.max_batch)
+
+
+@settings(max_examples=200, deadline=None)
+@given(batch=st.integers(32, 4096), ema=latencies, lat=latencies,
+       depth=depths)
+def test_single_step_monotone(batch, ema, lat, depth):
+    c = TickCoalescer(batch=batch, _ema_latency=ema)
+    before = c.batch                 # post-init clamped
+    a = 0.3                          # same float expression as record()
+    new_ema = (1 - a) * ema + a * lat
+    after = c.record(lat, depth)
+    if new_ema > c.target_latency_ms:
+        assert after <= before       # overloaded: never grow
+    elif depth > 2 * before:
+        assert after >= before       # headroom + backlog: never shrink
+    else:
+        assert after == before       # on target, shallow queue: hold
+
+
+@settings(max_examples=50, deadline=None)
+@given(lats=st.lists(st.floats(200.0, 10_000.0, allow_nan=False,
+                               allow_infinity=False),
+                     min_size=60, max_size=60))
+def test_sustained_overload_reaches_min_batch(lats):
+    c = TickCoalescer()              # target 50ms; every tick ≥ 200ms
+    for lat in lats:
+        b = c.record(lat, queue_depth=0)
+    assert b == c.min_batch
+
+
+@settings(max_examples=50, deadline=None)
+@given(lats=st.lists(st.floats(0.0, 10.0, allow_nan=False,
+                               allow_infinity=False),
+                     min_size=60, max_size=60))
+def test_sustained_headroom_reaches_max_batch(lats):
+    c = TickCoalescer()              # target 50ms; every tick ≤ 10ms
+    for lat in lats:
+        b = c.record(lat, queue_depth=10**9)
+    assert b == c.max_batch
+
+
+def test_invalid_bounds_rejected():
+    with pytest.raises(ValueError, match="min_batch"):
+        TickCoalescer(min_batch=64, max_batch=32)
+
+
+@settings(max_examples=300, deadline=None)
+@given(n=st.integers(1, 1 << 20), lo=st.sampled_from([1, 8, 16]))
+def test_quantize_pow2(n, lo):
+    p = quantize_pow2(n, lo)
+    assert p >= n and p >= lo
+    assert p & (p - 1) == 0          # a power of two
+    assert p <= max(lo, 2 * n)       # never more than 2x padding

@@ -11,9 +11,13 @@ import jax.numpy as jnp
 
 from repro.checkpoint import (
     AsyncCheckpointer,
+    CheckpointError,
+    checkpoint_steps,
     latest_step,
+    load_manifest,
     restore_checkpoint,
     save_checkpoint,
+    validate_checkpoint,
 )
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_with_warmup
 from repro.optim.compress import dequantize_tree, quantize_tree
@@ -72,6 +76,75 @@ def test_checkpoint_roundtrip(tmp_path):
     got = restore_checkpoint(str(tmp_path), 7, tree)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_skips_torn_checkpoint(tmp_path):
+    """A truncated npz (crash mid-write / bad disk) must be invisible to
+    latest_step and raise CheckpointError — not crash — on restore."""
+    tree = {"w": jnp.arange(6.0)}
+    save_checkpoint(str(tmp_path), 3, tree)
+    save_checkpoint(str(tmp_path), 7, tree)
+    torn = tmp_path / "step_7.npz"
+    torn.write_bytes(torn.read_bytes()[:40])
+    assert checkpoint_steps(str(tmp_path)) == [3, 7]
+    assert latest_step(str(tmp_path)) == 3
+    with pytest.raises(CheckpointError):
+        restore_checkpoint(str(tmp_path), 7, tree)
+    got = restore_checkpoint(str(tmp_path), 3, tree)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(6.0))
+
+
+def test_bad_or_missing_manifest_is_torn(tmp_path):
+    tree = {"w": jnp.ones(2)}
+    save_checkpoint(str(tmp_path), 5, tree, extra={"tag": "svc"})
+    assert load_manifest(str(tmp_path), 5)["tag"] == "svc"
+    (tmp_path / "step_5.json").write_text("{not json")
+    assert latest_step(str(tmp_path)) is None
+    with pytest.raises(CheckpointError):
+        load_manifest(str(tmp_path), 5)
+    os.remove(tmp_path / "step_5.json")
+    assert latest_step(str(tmp_path)) is None      # manifest is mandatory
+
+
+def test_crash_mid_step_overwrite_is_torn(tmp_path):
+    """Overwriting an existing step is two os.replace calls; a crash in
+    between leaves a NEW manifest paired with the OLD npz — both
+    individually valid.  The manifest's npz hash must expose the torn
+    pair."""
+    save_checkpoint(str(tmp_path), 5, {"w": jnp.zeros(3)}, extra={"gen": 1})
+    old_npz = (tmp_path / "step_5.npz").read_bytes()
+    save_checkpoint(str(tmp_path), 5, {"w": jnp.ones(3)}, extra={"gen": 2})
+    assert latest_step(str(tmp_path)) == 5
+    # simulate the crash: gen-2 manifest published, npz still gen-1
+    (tmp_path / "step_5.npz").write_bytes(old_npz)
+    with pytest.raises(CheckpointError, match="does not match"):
+        validate_checkpoint(str(tmp_path), 5)
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_missing_arrays_are_loud_schema_drift(tmp_path):
+    """The npz publishes atomically, so a missing array can only mean
+    the caller's state schema drifted — that must raise ValueError
+    (loud), NOT CheckpointError, lest recovery silently skip every
+    checkpoint and restart from scratch."""
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.ones(3)})
+    with pytest.raises(ValueError, match="missing"):
+        restore_checkpoint(str(tmp_path), 1,
+                           {"a": jnp.ones(3), "b": jnp.ones(2)})
+
+
+def test_fault_loop_resumes_past_torn_checkpoint(tmp_path):
+    """FaultTolerantLoop restore falls back to the newest USABLE step."""
+    make_init = lambda: {"x": jnp.zeros((), jnp.int32)}
+    step_fn = lambda state, i: {"x": state["x"] + 1}
+    loop = FaultTolerantLoop(str(tmp_path), step_fn, make_init, ckpt_every=5)
+    final = loop.run(20)                       # ckpts at 5, 10, 15, 20
+    assert int(final["x"]) == 20
+    torn = tmp_path / "step_20.npz"
+    torn.write_bytes(torn.read_bytes()[:32])
+    loop2 = FaultTolerantLoop(str(tmp_path), step_fn, make_init, ckpt_every=5)
+    state, start = loop2._resume()
+    assert start == 15 and int(state["x"]) == 15
 
 
 def test_async_checkpointer(tmp_path):
