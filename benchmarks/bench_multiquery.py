@@ -27,6 +27,7 @@ import numpy as np
 import jax
 
 from benchmarks.common import write_csv
+from repro.api import StreamSession
 from repro.core import compile_plan
 from repro.core.engine import build_tick
 from repro.core.multi import build_multi_tick, init_multi_state
@@ -134,10 +135,15 @@ def bench_service(queries, batches):
     # structural signature, and a padded-but-empty slot still costs a
     # full vmap lane.  Headroom (slots_per_group > occupancy) trades
     # throughput for recompile-free churn; measure occupancy = 1 here.
+    # Registration goes through the repro.api facade (adopt +
+    # register_query: exact queries, no canonical rewrite) so the bench
+    # exercises the public path; extract_matches=False keeps the
+    # measurement about tick cost, not host-side match decode.
     svc = ContinuousSearchService(slots_per_group=1, extract_matches=False,
                                   **CAP)
+    sess = StreamSession.adopt(svc)
     for q in queries:
-        svc.register(q, WINDOW)
+        sess.register_query(q, WINDOW)
 
     def tick(_state, b):
         svc.ingest(b)

@@ -1,0 +1,134 @@
+"""Engine-level ``serve_stream`` tick benchmark per join backend.
+
+The join-kernel trajectory (``BENCH_join.json``) scores isolated kernel
+calls; this benchmark scores the SERVING LOOP the way production runs
+it: a multi-tenant session (registered through the ``repro.api`` DSL so
+isomorphic tenants share compiled ticks), pinned chunk sizes, the full
+per-tick path — label scan, vmapped slot joins, match extraction, the
+one barrier — measured per backend (REF vs PALLAS_INTERPRET; compiled
+PALLAS rows appear when a TPU is attached).
+
+Output: ``BENCH_tick.json`` at the repo root (schema ``bench_tick/v1``),
+alongside ``BENCH_join.json``, so per-PR deltas of the end-to-end tick
+cost are machine-trackable.  ``--dry`` emits the same schema at tiny
+scale (the CI smoke gate).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.api import Pattern, StreamSession
+from repro.core.join import JoinBackend
+from repro.core.multi import SlotTickCache
+from repro.stream.generator import StreamConfig, synth_traffic_stream
+
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_tick.json")
+
+CAP = dict(level_capacity=512, l0_capacity=512, max_new=128)
+
+
+def tenant_patterns(n_tenants: int, window: int = 40):
+    """``n_tenants`` DSL patterns cycling over three structures, authored
+    with per-tenant vertex names (the canonicalizing planner collapses
+    them onto three compiled ticks regardless)."""
+    out = []
+    for i in range(n_tenants):
+        a, b, c = f"a{i}", f"b{i}", f"c{i}"
+        kind = i % 3
+        p = Pattern(f"tenant-{i}")
+        p.vertex(a, label=0).vertex(b, label=1).vertex(c, label=2)
+        if kind == 0:       # timing-ordered 2-chain
+            p.edge(a, b).edge(b, c).before(0, 1)
+        elif kind == 1:     # triangle with a timing chain
+            p.edge(a, b).edge(b, c).edge(c, a).before(0, 1).before(1, 2)
+        else:               # fork, second edge first
+            p.edge(a, b).edge(a, c).before(1, 0)
+        out.append(p.window(window))
+    return out
+
+
+def bench_backend(backend: str, n_tenants: int, n_edges: int,
+                  batch: int, warmup_ticks: int = 2) -> dict:
+    stream = synth_traffic_stream(StreamConfig(
+        n_edges=n_edges + warmup_ticks * batch, n_vertices=60,
+        n_vertex_labels=3, n_edge_labels=4, seed=17, ts_step_max=2))
+    tc = SlotTickCache()
+    sess = StreamSession(slots_per_group=8, backend=backend,
+                         tick_cache=tc, **CAP)
+    # a discarding callback: per-match typed decode is part of the
+    # serving cost being measured, but nothing may accumulate — an
+    # undrained queue would grow (and GC-churn) inside the timed region
+    for p in tenant_patterns(n_tenants):
+        sess.register(p, on_match=lambda m: None)
+
+    lat = []
+    serve = dict(batch_size=batch, min_batch=batch, max_batch=batch,
+                 on_tick=lambda i: lat.append(i.latency_ms))
+    sess.serve(stream[:warmup_ticks * batch], **serve)   # compile + warm
+    lat.clear()
+    t0 = time.perf_counter()
+    sess.serve(stream[warmup_ticks * batch:], **serve)
+    wall = time.perf_counter() - t0
+
+    lat_sorted = sorted(lat)
+    return {
+        "bench": "serve_tick",
+        "backend": backend,
+        "n_tenants": n_tenants,
+        "n_groups": len(sess.service._iter_groups()),
+        "n_compiles": sess.service.n_compiles,
+        "batch": batch,
+        "n_edges": n_edges,
+        "n_ticks": len(lat),
+        "edges_per_s": round(n_edges / wall, 1),
+        "ms_per_tick_mean": round(sum(lat) / max(1, len(lat)), 3),
+        "ms_per_tick_p50": round(lat_sorted[len(lat) // 2], 3) if lat else 0.0,
+        "ms_per_tick_max": round(max(lat), 3) if lat else 0.0,
+    }
+
+
+def bench_tick_json(reduced: bool = True, dry: bool = False) -> str:
+    """Assemble and write ``BENCH_tick.json`` at the repo root."""
+    if dry:
+        n_tenants, n_edges, batch = 3, 256, 32
+    elif reduced:
+        n_tenants, n_edges, batch = 9, 2048, 64
+    else:
+        n_tenants, n_edges, batch = 24, 16384, 128
+
+    backends = [JoinBackend.REF, JoinBackend.PALLAS_INTERPRET]
+    if jax.default_backend() == "tpu":
+        backends.append(JoinBackend.PALLAS)
+
+    results = [bench_backend(b, n_tenants, n_edges, batch) for b in backends]
+    doc = {
+        "schema": "bench_tick/v1",
+        "mode": "dry" if dry else ("reduced" if reduced else "full"),
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "note": ("end-to-end serve_stream ticks (label scan + vmapped "
+                 "slot joins + match extraction + barrier), multi-tenant "
+                 "via the repro.api DSL; PALLAS_INTERPRET timings are "
+                 "kernel-semantics validation, not TPU speed"),
+        "results": results,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# BENCH_tick.json -> {JSON_PATH} ({len(results)} rows)")
+    for r in results:
+        print(f"#   serve_tick {r['backend']}: {r['edges_per_s']} e/s, "
+              f"{r['ms_per_tick_mean']} ms/tick mean "
+              f"({r['n_tenants']} tenants, {r['n_groups']} groups, "
+              f"{r['n_compiles']} compiles)")
+    return JSON_PATH
+
+
+if __name__ == "__main__":
+    bench_tick_json()

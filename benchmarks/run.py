@@ -1,14 +1,16 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
 ``python -m benchmarks.run [--full|--dry]`` — reduced scales by default
-(CPU CI); CSV per figure goes to stdout and benchmarks/results/, and the
-kernel-join trajectory goes to ``BENCH_join.json`` at the repo root
-(machine-readable: backend × shape × slot-count timings plus the fused
+(CPU CI); CSV per figure goes to stdout and benchmarks/results/, and two
+machine-readable trajectories go to the repo root: ``BENCH_join.json``
+(kernel-level: backend × shape × slot-count timings plus the fused
 compat_join_pairs vs mask+nonzero bytes model — see
-``benchmarks.bench_kernels.bench_join_json``).
+``benchmarks.bench_kernels.bench_join_json``) and ``BENCH_tick.json``
+(engine-level: end-to-end ``serve_stream`` tick cost per backend through
+the ``repro.api`` session — see ``benchmarks.bench_service``).
 
-``--dry`` is the CI smoke mode: tiny shapes, only the join benches, but
-the same ``BENCH_join.json`` schema, so the emission path can't rot.
+``--dry`` is the CI smoke mode: tiny shapes, only the join + tick
+benches, but the same JSON schemas, so the emission paths can't rot.
 
 The roofline/dry-run tables (EXPERIMENTS.md §Dry-run/§Roofline) are
 produced separately by ``python -m repro.launch.dryrun --all`` and
@@ -20,7 +22,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import bench_engine, bench_kernels, bench_multiquery
+from benchmarks import bench_engine, bench_kernels, bench_multiquery, bench_service
 
 
 def main() -> None:
@@ -36,6 +38,7 @@ def main() -> None:
     t0 = time.time()
     if args.dry:
         bench_kernels.bench_join_json(reduced=True, dry=True)
+        bench_service.bench_tick_json(reduced=True, dry=True)
         print(f"# total bench wall time: {time.time() - t0:.1f}s")
         return
 
@@ -48,6 +51,7 @@ def main() -> None:
     bench_engine.rescan_baseline(reduced)             # Fan-et-al regime
     bench_kernels.compat_join_scaling(reduced)
     bench_kernels.bench_join_json(reduced=reduced)    # BENCH_join.json
+    bench_service.bench_tick_json(reduced=reduced)    # BENCH_tick.json
     bench_multiquery.main(                            # multi-tenant serving
         n_queries=6 if reduced else 12,
         n_edges=3000 if reduced else 20000)

@@ -80,7 +80,11 @@ def main():
     server = StreamServer(plan)
     total = server.ingest(
         stream, on_match=lambda b, t: hits.append((b.copy(), t.copy())))
-    print(f"{len(stream)} packets scanned, {total} attack instances found")
+    # StreamServer routes through repro.api: the typed handle is one
+    # property away (overflow status, named bindings via .matches())
+    sub = server.subscription
+    print(f"{len(stream)} packets scanned, {total} attack instances found "
+          f"(subscription {sub.status}, overflow={sub.n_overflow})")
     assert total >= 12, "planted attacks missed!"
     # verify a reported match is a real planted chain
     found_ts = {tuple(int(x) for x in t) for _, ts in hits for t in ts}

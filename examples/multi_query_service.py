@@ -1,18 +1,20 @@
-"""Multi-tenant continuous search: many standing queries, one stream,
-crash-safe serving.
+"""Multi-tenant continuous search through the public API: many standing
+patterns, one stream, crash-safe serving.
 
-Demonstrates the unified serving path (ContinuousSearchService):
+Demonstrates the ``repro.api`` surface end-to-end (the session drives
+``ContinuousSearchService`` underneath):
 
-  1. register several timing-constrained queries (different tenants);
-  2. serve a live edge stream with adaptive tick coalescing, collecting
-     per-query match deltas as they happen, while the service
-     checkpoints itself asynchronously every few ticks;
-  3. register a NEW query mid-stream — because it shares a structural
-     signature with an existing slot group, no recompilation happens
-     (watch ``svc.n_compiles``);
-  4. "crash" the server, then ``ContinuousSearchService.restore`` it
-     from the newest usable checkpoint: every tenant comes back under
-     its original qid, the compiled ticks come from the process-wide
+  1. declare timing-constrained patterns with the fluent DSL and
+     register them as separate tenants — ``Subscription`` handles give
+     typed matches keyed by each pattern's own vertex/edge names;
+  2. serve a live edge stream with adaptive tick coalescing while the
+     session checkpoints itself asynchronously every few ticks;
+  3. register a NEW pattern mid-stream that states the same structure in
+     a completely different authoring — the canonicalizing planner maps
+     it onto the existing compiled slot tick (watch ``n_compiles``);
+  4. "crash" the process, then ``StreamSession.restore``: every tenant
+     comes back under its original subscription with the same label
+     vocabulary, the compiled ticks come from the process-wide
      SlotTickCache (zero recompiles), and replaying the unserved tail
      of the stream misses nothing still inside the window.
 
@@ -21,71 +23,93 @@ Run:  PYTHONPATH=src python examples/multi_query_service.py
 
 import tempfile
 
-from repro.core.query import QueryGraph
-from repro.runtime.service import ContinuousSearchService
+from repro.api import Pattern, StreamSession
 from repro.stream.generator import StreamConfig, synth_traffic_stream
+
 
 def main():
     # A traffic-like stream: 3 vertex labels (host classes), 4 edge labels
-    # (ports).  Think intrusion patterns over flow records.
+    # (ports).  Think intrusion patterns over flow records.  Raw DataEdges
+    # feed straight into the session (they are already in label space).
     stream = synth_traffic_stream(StreamConfig(
         n_edges=2000, n_vertices=60, n_vertex_labels=3, n_edge_labels=4,
         seed=7, ts_step_max=2))
     ckpt_dir = tempfile.mkdtemp(prefix="tcss_ckpt_")
 
-    svc = ContinuousSearchService(
+    sess = StreamSession(
         slots_per_group=4, level_capacity=4096, l0_capacity=4096,
         max_new=1024, ckpt_dir=ckpt_dir)
 
-    # Tenant A: lateral movement — a timing-ordered 2-hop chain 0 -> 1 -> 2.
-    chain = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2)),
-                       prec=frozenset({(0, 1)}))
+    # Tenant A: lateral movement — a timing-ordered 2-hop chain.
+    chain = (Pattern("lateral")
+             .vertex("entry", label=0).vertex("pivot", label=1)
+             .vertex("target", label=2)
+             .edge("entry", "pivot").edge("pivot", "target")
+             .before(0, 1)
+             .window(60))
     # Tenant B: beaconing triangle with a full timing order.
-    tri = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2), (2, 0)),
-                     prec=frozenset({(0, 1), (1, 2)}))
-    qa = svc.register(chain, window=60)
-    qb = svc.register(tri, window=80)
-    print(f"registered qa={qa} (chain) qb={qb} (triangle); "
-          f"compiles so far: {svc.n_compiles}")
+    tri = (Pattern("beacon")
+           .vertex("a", label=0).vertex("b", label=1).vertex("c", label=2)
+           .edge("a", "b").edge("b", "c").edge("c", "a")
+           .before(0, 1).before(1, 2)
+           .window(80))
+    sub_a = sess.register(chain)
+    sub_b = sess.register(tri)
+    print(f"registered {sub_a.name!r} and {sub_b.name!r}; "
+          f"compiles so far: {sess.service.n_compiles}")
 
     # serve the first half with periodic async checkpoints
     half = len(stream) // 2
-    counts = svc.serve_stream(
-        stream[:half], ckpt_every=5, batch_size=64)
-    print(f"mid-stream: chain={counts.get(qa, 0)} "
-          f"triangle={counts.get(qb, 0)} new matches "
-          f"(served {svc.n_edges_ingested} edges in {svc.n_ticks} ticks)")
+    counts = sess.serve(stream[:half], ckpt_every=5, batch_size=64)
+    st = sess.status()
+    print(f"mid-stream: lateral={counts.get(sub_a, 0)} "
+          f"beacon={counts.get(sub_b, 0)} new matches "
+          f"(served {st.n_edges_ingested} edges in {st.n_ticks} ticks)")
 
-    # Tenant C arrives mid-stream with a *relabeled* chain (hosts of class
-    # 2 -> 0 -> 1).  Same structure as tenant A's chain, so registration
-    # is a pure slot write: n_compiles must not move.
-    before = svc.n_compiles
-    chain_c = QueryGraph(3, (2, 0, 1), ((0, 1), (1, 2)),
-                         prec=frozenset({(0, 1)}))
-    qc = svc.register(chain_c, window=60)
-    assert svc.n_compiles == before, "same-structure registration recompiled!"
-    print(f"registered qc={qc} mid-stream with NO recompile "
-          f"(compiles: {svc.n_compiles})")
-    svc.unregister(qb)  # tenant B leaves; its slot is reusable
-    svc.checkpoint()    # make the new tenant layout durable
-    svc.ckpt.wait()
+    # Tenant C arrives mid-stream stating the SAME chain structure in a
+    # different authoring: reversed edge order, different names, labels
+    # permuted onto the hosts.  The planner canonicalizes it onto tenant
+    # A's slot group: registration is a pure slot write, no recompile.
+    before = sess.service.n_compiles
+    chain_c = (Pattern("lateral-reauthored")
+               .vertex("x", label=2).vertex("y", label=0)
+               .vertex("z", label=1)
+               .edge("z", "x", name="hop2")
+               .edge("y", "z", name="hop1")
+               .before("hop1", "hop2")
+               .window(60))
+    sub_c = sess.register(chain_c)
+    assert sess.service.n_compiles == before, \
+        "same-structure registration recompiled!"
+    print(f"registered {sub_c.name!r} mid-stream with NO recompile "
+          f"(compiles: {sess.service.n_compiles})")
+    sub_b.close()       # tenant B leaves; its slot is reusable
+    sess.checkpoint()   # make the new tenant layout durable
+    sess.close()
 
-    # ---- simulated crash: the server object is gone ---------------------
-    del svc
-    svc = ContinuousSearchService.restore(ckpt_dir)
-    print(f"restored from {ckpt_dir}: {svc.n_active} tenants, "
-          f"resume offset {svc.n_edges_ingested}, "
-          f"recompiles on restore: {svc.n_compiles} (ticks were cached)")
+    # ---- simulated crash: the session object is gone --------------------
+    del sess
+    sess = StreamSession.restore(ckpt_dir)
+    subs = {s.name: s for s in sess.subscriptions()}
+    print(f"restored from {ckpt_dir}: {sorted(subs)} "
+          f"at resume offset {sess.resume_offset}, "
+          f"recompiles on restore: {sess.service.n_compiles} (ticks cached)")
 
-    # replay the unserved tail; a restored server misses nothing in-window
-    counts2 = svc.serve_stream(stream[svc.n_edges_ingested:], ckpt_every=5)
-    print(f"end of stream: chain={counts.get(qa, 0) + counts2.get(qa, 0)} "
-          f"relabeled-chain={counts2.get(qc, 0)} new matches over "
-          f"{svc.n_edges_ingested} edges")
-    print(f"windowed matches live right now: qa={len(svc.matches(qa))} "
-          f"qc={len(svc.matches(qc))}")
+    # replay the unserved tail; a restored session misses nothing in-window
+    counts2 = sess.serve(stream[sess.resume_offset:], ckpt_every=5)
+    sub_a2, sub_c2 = subs["lateral"], subs["lateral-reauthored"]
+    print(f"end of stream: lateral={counts.get(sub_a, 0) + counts2.get(sub_a2, 0)} "
+          f"reauthored-lateral={counts2.get(sub_c2, 0)} new matches over "
+          f"{sess.resume_offset} edges")
+    for m in sub_a2.matches()[:3]:
+        print(f"  live window match: entry={m.bindings['entry']} "
+              f"pivot={m.bindings['pivot']} target={m.bindings['target']} "
+              f"completed@{m.ts}")
+    print(f"windowed matches live right now: "
+          f"lateral={len(sub_a2.matches())} "
+          f"reauthored={len(sub_c2.matches())}")
     print(f"total slot-group compiles for 3 tenants + churn + crash/"
-          f"restore: {svc.n_compiles}")
+          f"restore: {sess.service.n_compiles}")
 
 
 if __name__ == "__main__":

@@ -8,8 +8,12 @@ fine-grained-locking concurrency model.
 
 Subpackages
 -----------
+api        THE public surface: declarative pattern DSL, canonicalizing
+           planner, typed Event/Match records, StreamSession facade
+           (register -> subscribe -> ingest/serve -> restore).
 core       The paper's contribution: query compilation (TC decomposition,
-           join-order selection) and the streaming match engine (tick()).
+           join-order selection, canonical forms) and the streaming match
+           engine (tick()).
 stream     Edge-stream generators, sliding-window bookkeeping.
 models     Assigned architecture zoo (LM transformers, GNNs, recsys).
 optim      AdamW (+ factored / quantized state), gradient compression.

@@ -65,19 +65,64 @@ def _sha256(path: str) -> str:
     return h.hexdigest()
 
 
+class _HashingWriter:
+    """Write-through file wrapper that hashes bytes as they stream past.
+
+    A naive hash-on-write breaks under ``zipfile``: with a seekable
+    output it backpatches each member's local header (CRC/sizes) after
+    writing the data, invalidating any running prefix hash.  This
+    wrapper therefore *refuses to be seekable* (``tell`` raises, which
+    makes ``zipfile`` wrap it in ``_Tellable`` and switch to purely
+    sequential data-descriptor writes), so the bytes pass exactly once
+    and the running sha256 equals a post-hoc hash of the file — without
+    ``save_checkpoint`` re-reading the npz it just wrote.
+    """
+
+    def __init__(self, f):
+        self._f = f
+        self._h = hashlib.sha256()
+
+    def write(self, data) -> int:
+        # both update() and write() take buffer-protocol objects directly;
+        # converting to bytes here would re-copy every checkpointed byte
+        self._h.update(data)
+        return self._f.write(data)
+
+    def flush(self):
+        self._f.flush()
+
+    # presence of ``read`` makes np.savez treat this as file-like; both
+    # read and tell raise so zipfile takes its non-seekable write path
+    def read(self, *args):
+        raise OSError("write-only hashing stream")
+
+    def tell(self):
+        raise OSError("non-seekable hashing stream")
+
+    def seekable(self) -> bool:
+        return False
+
+    def hexdigest(self) -> str:
+        return self._h.hexdigest()
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None):
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(tree)
     out, man_out = _paths(ckpt_dir, step)
     tmp = os.path.join(ckpt_dir, f".tmp_step_{step}.npz")
-    np.savez(tmp, **flat)
+    # hash WHILE writing (no second pass over the npz): zipfile streams
+    # sequentially through the non-seekable wrapper
+    with open(tmp, "wb") as f:
+        hw = _HashingWriter(f)
+        np.savez(hw, **flat)
     # the manifest records the npz content hash: overwriting an existing
     # step is two replaces, and the hash is what ties the PAIR together —
     # a crash between them leaves a new manifest with an old npz, which
     # validate_checkpoint then rejects as torn instead of silently
     # restoring mismatched state
     manifest = {"step": step, "n_arrays": len(flat),
-                "npz_sha256": _sha256(tmp), **(extra or {})}
+                "npz_sha256": hw.hexdigest(), **(extra or {})}
     man_tmp = os.path.join(ckpt_dir, f".tmp_step_{step}.json")
     with open(man_tmp, "w") as f:
         json.dump(manifest, f)

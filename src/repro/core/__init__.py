@@ -3,6 +3,9 @@
 Layers
 ------
 query       QueryGraph with a strict partial order ``prec`` over query edges.
+canon       Canonical relabeling of query graphs: isomorphic-modulo-
+            relabeling queries map to one representation (the api
+            planner's cross-tenant sharing key).
 decompose   TC-subquery enumeration (Alg. 5), greedy minimum-cardinality
             decomposition (Alg. 6), join-order selection (Def. 14).
 plan        Compilation of a decomposed query into numeric join specs
@@ -20,6 +23,7 @@ sjtree      SJ-tree baseline (Choudhury et al. 2015) + timing post-filter.
 distributed shard_map-wrapped tick for multi-device execution.
 """
 
+from repro.core.canon import CanonicalForm, canonical_form, canonical_key
 from repro.core.query import QueryGraph
 from repro.core.decompose import decompose, tc_subqueries, join_order
 from repro.core.plan import ExecutionPlan, compile_plan

@@ -1,13 +1,17 @@
 """Single-query serving driver — a thin wrapper over the unified path.
 
 There is ONE serving loop in this codebase:
-``repro.runtime.service.ContinuousSearchService``.  ``StreamServer``
-keeps the historical single-query API (construct from an ExecutionPlan,
-feed DataEdge lists, get an ``on_match`` callback) but builds no ticks
-and owns no loop of its own: it registers its one query as a tenant of
-a one-slot service and delegates ingest — adaptive tick coalescing,
-periodic async checkpoints, power-of-two batch padding — to
-``serve_stream``.
+``repro.runtime.service.ContinuousSearchService``, fronted by the
+public ``repro.api.StreamSession`` facade.  ``StreamServer`` keeps the
+historical single-query API (construct from an ExecutionPlan, feed
+DataEdge lists, get an array-level ``on_match`` callback) but builds no
+ticks and owns no loop of its own: it registers its one query as a
+tenant of a one-slot service *through the api session*
+(``StreamSession.adopt`` + ``register_query``, which also rides the
+session's vocab/pattern state inside every checkpoint manifest) and
+delegates ingest — adaptive tick coalescing, periodic async
+checkpoints, power-of-two batch padding — to ``serve_stream``.  The
+typed per-match surface is one call away: ``server.subscription``.
 
 Fault tolerance comes from the service layer too: with ``ckpt_dir`` set,
 a restarted ``StreamServer`` restores the full service (expansion lists,
@@ -17,6 +21,7 @@ skipped — and misses nothing that is still inside the window.
 
 from __future__ import annotations
 
+from repro.api import StreamSession, Subscription
 from repro.checkpoint import (
     CheckpointError,
     checkpoint_steps,
@@ -31,7 +36,7 @@ from repro.runtime.straggler import TickCoalescer
 
 
 class StreamServer:
-    """One standing query served through ``ContinuousSearchService``."""
+    """One standing query served through the ``repro.api`` session path."""
 
     def __init__(self, plan: ExecutionPlan, ckpt_dir: str | None = None,
                  extract_matches: bool | None = None,
@@ -46,7 +51,7 @@ class StreamServer:
         if ckpt_dir and checkpoint_steps(ckpt_dir):
             try:
                 # restore validates (hashes) the chosen step exactly once
-                self.service = ContinuousSearchService.restore(
+                service = ContinuousSearchService.restore(
                     ckpt_dir, tick_cache=tick_cache, backend=backend,
                     extract_matches=extract_matches)
             except CheckpointError as e:
@@ -63,13 +68,14 @@ class StreamServer:
                 raise CheckpointError(
                     f"ckpt_dir {ckpt_dir!r} contains checkpoints but none "
                     "are usable (all torn/partial)") from e
-            qids = self.service.registry.qids()
+            self.session = StreamSession.adopt(service)
+            qids = service.registry.qids()
             if len(qids) != 1:
                 raise ValueError(
                     f"checkpoint under {ckpt_dir!r} holds {len(qids)} "
                     "queries; restore it as a ContinuousSearchService")
             self.qid = qids[0]
-            rq = self.service.registry.get(self.qid)
+            rq = service.registry.get(self.qid)
             if rq.query != plan.query or rq.window != plan.window:
                 raise ValueError(
                     f"checkpoint under {ckpt_dir!r} holds a different "
@@ -90,7 +96,7 @@ class StreamServer:
                     "different plan capacities or decomposition; clear "
                     "the directory to serve the new plan from scratch")
         else:
-            self.service = ContinuousSearchService(
+            service = ContinuousSearchService(
                 slots_per_group=1,
                 level_capacity=lv.capacity,
                 l0_capacity=l0_cap,
@@ -101,13 +107,25 @@ class StreamServer:
                 ckpt_dir=ckpt_dir,
                 tick_cache=tick_cache,
             )
+            self.session = StreamSession.adopt(service)
             # register the EXACT plan (a caller's custom decomposition
-            # must be served, not re-derived)
-            self.qid = self.service.register(plan.query, plan.window,
-                                             plan=plan)
+            # must be served, not re-derived; register_query skips
+            # canonicalization for exactly that reason)
+            self.qid = self.session.register_query(
+                plan.query, plan.window, plan=plan).qid
         self.plan = self.service.registry.get(self.qid).plan
 
     # ------------------------------------------------------------------ #
+    @property
+    def service(self) -> ContinuousSearchService:
+        return self.session.service
+
+    @property
+    def subscription(self) -> Subscription:
+        """The typed api handle for this server's one query (named
+        bindings, ``matches()``/``drain()``, overflow status)."""
+        return self.session._subs[self.qid]
+
     @property
     def state(self):
         return self.service.state(self.qid)
@@ -130,14 +148,26 @@ class StreamServer:
                batch_size: int = 64):
         """Feed DataEdges; returns total new matches reported.
 
-        The adaptive batch-size (AIMD) state persists across ``ingest``
+        ``on_match(bindings, ets)`` receives raw engine arrays (the
+        historical surface) and, when given, is the sole consumer of the
+        matches.  Without it, matches route to the typed
+        ``self.subscription`` surface instead — its ``on_match(Match)``
+        callback if attached, else its ``drain()`` queue (bounded at
+        ``Subscription.MAX_PENDING`` — drain regularly on long streams
+        or the oldest matches are dropped and counted).  The
+        adaptive batch-size (AIMD) state persists across ``ingest``
         calls, so a consumer feeding the server in repeated chunks keeps
         the batch size it converged to (``batch_size`` only seeds the
         first call)."""
         if self._coalescer is None:
             self._coalescer = TickCoalescer.seeded(batch_size)
-        cb = None if on_match is None else (
-            lambda qid, bindings, ets: on_match(bindings, ets))
+        if on_match is not None:
+            cb = lambda qid, bindings, ets: on_match(bindings, ets)
+        elif self.service.extract_matches:
+            sub = self.subscription
+            cb = lambda qid, bindings, ets: sub._deliver_rows(bindings, ets)
+        else:
+            cb = None
         totals = self.service.serve_stream(
             edges, on_match=cb, ckpt_every=ckpt_every,
             coalescer=self._coalescer)

@@ -1,8 +1,10 @@
-"""Continuous-search service: the unified serving path for standing queries.
+"""Continuous-search service: the unified serving ENGINE for standing queries.
 
-This is THE serving front-end for the engine — single-query and
-multi-tenant alike (``repro.launch.stream_serve.StreamServer`` is now a
-thin one-tenant wrapper over this class).  Standing queries arrive and
+This is the internal engine room.  The public way to use the system is
+``repro.api`` — a ``StreamSession`` facade (pattern DSL, canonicalizing
+planner, typed Event/Match records, admission control) that drives this
+class underneath; ``repro.launch.stream_serve.StreamServer`` is a thin
+one-tenant wrapper over the same path.  Standing queries arrive and
 leave while the edge stream flows; the service keeps the compile budget
 fixed by bucketing queries into padded slot groups keyed by structural
 signature, and owns the whole production loop: adaptive tick coalescing,
@@ -120,6 +122,7 @@ class ServeInfo(NamedTuple):
     n_edges_ingested: int   # cumulative edges consumed after this tick
     chunk: int              # edges consumed by this tick
     latency_ms: float       # barrier latency of this tick (all groups)
+    n_overflow: int = 0     # dropped appends this tick, summed over qids
 
 
 @dataclass(eq=False)       # identity semantics: fields hold device arrays
@@ -186,6 +189,10 @@ class ContinuousSearchService:
         self.n_compiles = 0          # build_slot_tick cache misses (this service)
         self.n_edges_ingested = 0
         self.n_ticks = 0
+        # caller state carried inside every checkpoint manifest (the api
+        # layer persists its vocab/pattern plans here); a dict, or a
+        # zero-arg callable evaluated at checkpoint time
+        self.manifest_extra: dict = {}
 
     # ------------------------------------------------------------------ #
     @property
@@ -263,6 +270,26 @@ class ContinuousSearchService:
             n_idle = sum(1 for g in siblings if g.idle)
             if n_idle > 1:
                 siblings.remove(group)
+
+    def overflow_pressure(self, signature=None) -> int:
+        """Cumulative dropped appends across active tenants — of one
+        structural ``plan_signature``, or the whole service.
+
+        The engine counts per-slot overflow passively; this is the
+        admission-control read: a structure under pressure (> 0) has
+        already lost partial matches at the current capacities, so the
+        api layer refuses to admit more tenants of that structure.
+        ONE device read per group (the stacked ``[S]`` overflow counters
+        come back in a single transfer; unarmed slots hold zeros) —
+        call at admission/status time, not per tick.
+        """
+        if signature is not None:
+            groups = self._groups.get(signature, [])
+        else:
+            groups = self._iter_groups()
+        return sum(
+            int(np.asarray(g.sstate.engines.stats.n_overflow).sum())
+            for g in groups if not g.idle)
 
     def drop_idle_groups(self) -> int:
         """Release all fully-empty slot groups (device tables); returns
@@ -375,12 +402,14 @@ class ContinuousSearchService:
             jax.block_until_ready([g.sstate for g in active])   # the barrier
             lat_ms = (time.perf_counter() - t0) * 1e3
             coalescer.record(lat_ms, queue_depth)
+            tick_overflow = 0
             for g, res in results:
                 for k, qid in enumerate(g.qids):
                     if qid is None:
                         continue
                     r = jax.tree.map(lambda x, k=k: x[k], res)
                     n_new = int(r.n_new_matches)
+                    tick_overflow += int(r.n_overflow)
                     totals[qid] = totals.get(qid, 0) + n_new
                     if n_new and on_match is not None:
                         valid = np.asarray(r.match_valid)
@@ -398,6 +427,7 @@ class ContinuousSearchService:
                     n_edges_ingested=self.n_edges_ingested,
                     chunk=len(chunk),
                     latency_ms=lat_ms,
+                    n_overflow=tick_overflow,
                 ))
         if self.ckpt:
             if ckpt_every and final_checkpoint and \
@@ -413,7 +443,10 @@ class ContinuousSearchService:
     def _manifest(self) -> dict:
         """JSON-serializable description of everything that is NOT a
         device array: config, registry, slot layout, counters."""
+        extra = (self.manifest_extra() if callable(self.manifest_extra)
+                 else self.manifest_extra)
         return {
+            "extra": extra,
             "config": {
                 "slots_per_group": self.slots_per_group,
                 "level_capacity": self.registry.level_capacity,
@@ -528,6 +561,7 @@ class ContinuousSearchService:
         man = man["service"]
         svc = cls(ckpt_dir=ckpt_dir, tick_cache=tick_cache,
                   **{**man["config"], **overrides})
+        svc.manifest_extra = man.get("extra", {})
         for qid_s, ent in man["queries"].items():
             svc.registry.adopt(
                 int(qid_s), QueryGraph.from_spec(ent["query"]),

@@ -1,0 +1,128 @@
+"""Property tests (hypothesis) for the public API's compilation chain:
+
+1. ``Pattern -> QueryGraph -> to_spec -> from_spec -> canonical form``
+   is idempotent (the checkpoint-manifest round-trip is a fixed point of
+   canonicalization);
+2. canonicalization is invariant under vertex renumbering and edge
+   reordering of the authored query;
+3. label-only changes never perturb the canonical *structure* (edges +
+   precedence), which is what lets same-structure tenants share one
+   compiled slot tick;
+4. two authorings of the same abstract pattern through the DSL — edges
+   stated in any order, vertices named anything — compile to the same
+   canonical query under one shared vocab.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.api import LabelVocab, Pattern
+from repro.core.canon import canonical_form
+from repro.core.query import QueryGraph
+
+
+@st.composite
+def abstract_queries(draw):
+    """(n_vertices, edges, prec, vlabels, elabels) with prec drawn from a
+    random total order on edges — always a strict partial order."""
+    n = draw(st.integers(2, 5))
+    pairs = [(u, v) for u in range(n) for v in range(n) if u != v]
+    m = draw(st.integers(1, min(5, len(pairs))))
+    edges = tuple(draw(st.permutations(pairs))[:m])
+    order = draw(st.permutations(range(m)))
+    pos = {e: i for i, e in enumerate(order)}
+    chains = [(i, j) for i in range(m) for j in range(m) if pos[i] < pos[j]]
+    prec = frozenset(draw(st.sets(st.sampled_from(chains)))) if chains \
+        else frozenset()
+    vlabels = tuple(draw(st.lists(st.integers(0, 3), min_size=n, max_size=n)))
+    elabels = tuple(draw(st.lists(st.sampled_from([-1, 0, 1, 2]),
+                                  min_size=m, max_size=m)))
+    return n, edges, prec, vlabels, elabels
+
+
+def make_query(spec) -> QueryGraph:
+    n, edges, prec, vlabels, elabels = spec
+    return QueryGraph(n, vlabels, edges, elabels, prec)
+
+
+def relabel(spec, vperm, eorder):
+    """Renumber vertices by ``vperm`` and reorder edges by ``eorder``."""
+    n, edges, prec, vlabels, elabels = spec
+    new_vlabels = tuple(vlabels[vperm.index(k)] for k in range(n))
+    new_edges = tuple((vperm[edges[e][0]], vperm[edges[e][1]])
+                      for e in eorder)
+    new_elabels = tuple(elabels[e] for e in eorder)
+    inv = {old: new for new, old in enumerate(eorder)}
+    new_prec = frozenset((inv[i], inv[j]) for i, j in prec)
+    return n, new_edges, new_prec, new_vlabels, new_elabels
+
+
+@settings(max_examples=120, deadline=None)
+@given(spec=abstract_queries(), data=st.data())
+def test_canonicalization_invariant_under_relabeling(spec, data):
+    q = make_query(spec)
+    n, edges = spec[0], spec[1]
+    vperm = list(data.draw(st.permutations(range(n))))
+    eorder = list(data.draw(st.permutations(range(len(edges)))))
+    q2 = make_query(relabel(spec, vperm, eorder))
+    assert canonical_form(q).query == canonical_form(q2).query
+
+
+@settings(max_examples=120, deadline=None)
+@given(spec=abstract_queries())
+def test_spec_roundtrip_is_canonical_fixed_point(spec):
+    q = make_query(spec)
+    c = canonical_form(q).query
+    back = QueryGraph.from_spec(c.to_spec())
+    assert back == c
+    again = canonical_form(back)
+    assert again.query == c
+    assert again.vertex_map == tuple(range(c.n_vertices))
+    assert again.edge_map == tuple(range(c.n_edges))
+
+
+@settings(max_examples=120, deadline=None)
+@given(spec=abstract_queries(), data=st.data())
+def test_labels_only_changes_keep_canonical_structure(spec, data):
+    n, edges, prec, _, _ = spec
+    vl2 = tuple(data.draw(
+        st.lists(st.integers(0, 3), min_size=n, max_size=n)))
+    el2 = tuple(data.draw(
+        st.lists(st.sampled_from([-1, 0, 1, 2]),
+                 min_size=len(edges), max_size=len(edges))))
+    c1 = canonical_form(make_query(spec)).query
+    c2 = canonical_form(make_query((n, edges, prec, vl2, el2))).query
+    assert c1.edges == c2.edges
+    assert c1.prec == c2.prec
+
+
+@settings(max_examples=80, deadline=None)
+@given(spec=abstract_queries(), data=st.data())
+def test_dsl_authoring_order_does_not_matter(spec, data):
+    """Author one abstract pattern twice — edges in different orders,
+    different vertex names — and get the same canonical query."""
+    n, edges, prec, vlabels, elabels = spec
+    eorder = list(data.draw(st.permutations(range(len(edges)))))
+    vocab = LabelVocab()
+
+    def author(names, order):
+        p = Pattern()
+        for v in range(n):
+            p.vertex(names[v], label=f"vl{vlabels[v]}")
+        for e in order:
+            u, v = edges[e]
+            p.edge(names[u], names[v], name=f"edge{e}",
+                   label=None if elabels[e] == -1 else f"el{elabels[e]}")
+        for i, j in prec:
+            p.before(f"edge{i}", f"edge{j}")
+        return p.window(30)
+
+    p1 = author([f"a{v}" for v in range(n)], list(range(len(edges))))
+    p2 = author([f"b{v}" for v in range(n)], eorder)
+    q1, w1 = p1.build(vocab)
+    q2, w2 = p2.build(vocab)
+    assert w1 == w2 == 30
+    assert canonical_form(q1).query == canonical_form(q2).query

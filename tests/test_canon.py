@@ -1,0 +1,91 @@
+"""Unit tests for query-graph canonicalization (repro.core.canon).
+
+The planner relies on three properties: invariance (any authoring of an
+isomorphic query canonicalizes identically), idempotence (canonical form
+is a fixed point), and structure-first ordering (label changes never
+perturb the canonical edge ordering, so same-structure queries share one
+``plan_signature`` and therefore one compiled slot tick).
+"""
+
+from repro.core.canon import canonical_form, canonical_key
+from repro.core.plan import compile_plan
+from repro.core.query import QueryGraph, example_paper_query
+from repro.core.registry import plan_signature
+
+
+def chain(vlabels=(0, 1, 2)):
+    return QueryGraph(3, vlabels, ((0, 1), (1, 2)), prec=frozenset({(0, 1)}))
+
+
+def test_authoring_variants_canonicalize_identically():
+    q1 = chain()
+    # vertex ids permuted (2,1,0 carry the labels so the labeled graph
+    # is the same), edges listed in the same relative order
+    q2 = QueryGraph(3, (2, 1, 0), ((2, 1), (1, 0)), prec=frozenset({(0, 1)}))
+    # edge order flipped, prec restated over the flipped ids
+    q3 = QueryGraph(3, (0, 1, 2), ((1, 2), (0, 1)), prec=frozenset({(1, 0)}))
+    c1, c2, c3 = (canonical_form(q).query for q in (q1, q2, q3))
+    assert c1 == c2 == c3
+    assert canonical_key(q1) == canonical_key(q2) == canonical_key(q3)
+
+
+def test_maps_are_consistent_relabelings():
+    q = QueryGraph(3, (5, 7, 9), ((2, 1), (1, 0)), prec=frozenset({(1, 0)}))
+    c = canonical_form(q)
+    # vertex_map carries labels and edge endpoints into the canonical graph
+    for v in range(q.n_vertices):
+        assert c.query.vertex_labels[c.vertex_map[v]] == q.vertex_labels[v]
+    for e, (u, v) in enumerate(q.edges):
+        cu, cv = c.query.edges[c.edge_map[e]]
+        assert (cu, cv) == (c.vertex_map[u], c.vertex_map[v])
+        assert c.query.edge_labels[c.edge_map[e]] == q.edge_labels[e]
+    # prec maps through edge_map
+    assert c.query.prec == frozenset(
+        (c.edge_map[i], c.edge_map[j]) for i, j in q.prec)
+
+
+def test_idempotent_on_canonical_form():
+    for q in (chain(), example_paper_query()):
+        c = canonical_form(q).query
+        again = canonical_form(c)
+        assert again.query == c
+        assert again.vertex_map == tuple(range(c.n_vertices))
+        assert again.edge_map == tuple(range(c.n_edges))
+
+
+def test_labels_never_perturb_canonical_structure():
+    """Different labelings of one structure must produce the same
+    canonical edges/prec (labels are runtime slot data — if they steered
+    the edge ordering, same-structure tenants would stop sharing ticks)."""
+    variants = [chain((0, 1, 2)), chain((1, 0, 1)), chain((9, 9, 9))]
+    forms = [canonical_form(q).query for q in variants]
+    assert len({(f.edges, tuple(sorted(f.prec))) for f in forms}) == 1
+    # and the compiled plans share one structural signature
+    sigs = {plan_signature(compile_plan(f, 30)) for f in forms}
+    assert len(sigs) == 1
+
+
+def test_isomorphic_authorings_share_plan_signature():
+    """The end goal: differently-authored isomorphic queries compile to
+    ONE plan signature after canonicalization (they would NOT without:
+    the decomposition consumes edge ids directly)."""
+    tri_a = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2), (2, 0)),
+                       prec=frozenset({(0, 1), (1, 2)}))
+    # rotated vertex ids + reshuffled edge list + prec over the new ids
+    tri_b = QueryGraph(3, (1, 2, 0), ((2, 0), (1, 2), (0, 1)),
+                       prec=frozenset({(2, 1), (1, 0)}))
+    ca, cb = canonical_form(tri_a).query, canonical_form(tri_b).query
+    assert (ca.edges, tuple(sorted(ca.prec))) == \
+        (cb.edges, tuple(sorted(cb.prec)))
+    assert plan_signature(compile_plan(ca, 30)) == \
+        plan_signature(compile_plan(cb, 30))
+
+
+def test_paper_query_roundtrip():
+    q = example_paper_query()
+    c = canonical_form(q)
+    assert c.query.n_edges == q.n_edges
+    assert len(c.query.prec) == len(q.prec)
+    assert sorted(c.query.vertex_labels) == sorted(q.vertex_labels)
+    # canonical form still a valid strict partial order / TC query
+    assert c.query.is_tc_query() == q.is_tc_query()

@@ -78,6 +78,60 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_save_hashes_while_writing_no_reread(tmp_path):
+    """``save_checkpoint`` must compute the manifest's npz hash WHILE
+    streaming the file out — not by re-reading what it just wrote
+    (ROADMAP: zipfile backpatches local headers on close, which is why
+    the writer wrapper must refuse to be seekable).  Proof: poison the
+    re-read hasher; the save must still succeed, and the recorded hash
+    must equal an independent full re-read of the published file."""
+    import hashlib
+
+    from repro.checkpoint import ckpt as ckpt_mod
+
+    def _boom(path):
+        raise AssertionError(f"save re-read {path} to hash it")
+
+    orig = ckpt_mod._sha256
+    ckpt_mod._sha256 = _boom
+    try:
+        tree = {"w": jnp.arange(4096.0).reshape(64, 64),
+                "b": {"c": jnp.ones(7, jnp.int32)}}
+        save_checkpoint(str(tmp_path), 9, tree, extra={"tag": "hw"})
+    finally:
+        ckpt_mod._sha256 = orig
+    want = load_manifest(str(tmp_path), 9)["npz_sha256"]
+    got = hashlib.sha256((tmp_path / "step_9.npz").read_bytes()).hexdigest()
+    assert want == got
+    # the hash still ties the pair together: validation + restore work
+    validate_checkpoint(str(tmp_path), 9)
+    back = restore_checkpoint(str(tmp_path), 9, tree)
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_hashing_writer_sequential_digest(tmp_path):
+    """The wrapper's running digest equals sha256 of the bytes written,
+    and it refuses the seek/read operations zipfile would need to
+    backpatch (that refusal is what keeps the stream sequential)."""
+    import hashlib
+
+    from repro.checkpoint.ckpt import _HashingWriter
+
+    path = tmp_path / "blob"
+    with open(path, "wb") as f:
+        hw = _HashingWriter(f)
+        for chunk in (b"alpha", b"", b"beta" * 1000, bytes(range(256))):
+            hw.write(chunk)
+        hw.flush()
+        assert not hw.seekable()
+        with pytest.raises(OSError):
+            hw.tell()
+        with pytest.raises(OSError):
+            hw.read()
+    assert hw.hexdigest() == hashlib.sha256(path.read_bytes()).hexdigest()
+
+
 def test_latest_step_skips_torn_checkpoint(tmp_path):
     """A truncated npz (crash mid-write / bad disk) must be invisible to
     latest_step and raise CheckpointError — not crash — on restore."""
