@@ -1,0 +1,184 @@
+"""Shared-vs-unshared prefix benchmark: does CSE across tenants pay?
+
+For N tenants at overlap fraction f, ``ceil(f*N)`` tenants register ONE
+identical chain pattern (maximal prefix overlap — they alias one forest
+node chain) and the rest get label-distinct chains (no overlap — each
+pays its own nodes, the worst case for sharing overhead).  Each
+configuration is served twice through ``ContinuousSearchService`` —
+``enable_sharing=True`` vs ``False`` — over the same synthetic stream
+with pinned chunk sizes, measuring per-tick cost and the device bytes
+held by partial-match tables (slot groups + forest nodes).
+
+Output: ``BENCH_share.json`` at the repo root (schema ``bench_share/
+v1``), rows per (sharing, n_tenants, overlap) plus a ``speedup`` block
+per (n_tenants, overlap) pair, so per-PR deltas of the dedup win are
+machine-trackable.  ``--dry`` emits the same schema at tiny scale (the
+CI smoke gate).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import jax
+
+from repro.core.join import JoinBackend
+from repro.core.multi import SlotTickCache
+from repro.core.query import QueryGraph
+from repro.runtime.service import ContinuousSearchService
+from repro.stream.generator import StreamConfig, synth_traffic_stream
+
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_share.json")
+
+CAP = dict(level_capacity=1024, l0_capacity=1024, max_new=256)
+WINDOW = 40
+N_VLABELS = 8
+
+
+def tenant_queries(n_tenants: int, overlap: float,
+                   n_edge_labels: int = 4) -> list[QueryGraph]:
+    """``ceil(overlap * n)`` copies of one 3-chain + label-distinct
+    3-chains for the rest (distinct prefix signatures at every depth —
+    the non-overlapping tenants must NOT silently alias each other, or
+    the unshared baseline rows measure hidden sharing)."""
+    n_shared = math.ceil(overlap * n_tenants)
+    n_distinct = n_tenants - n_shared
+    # distinct = (head-vertex-label offset) x (first-edge label); offsets
+    # start at 1 so no distinct tenant collides with the shared pattern
+    assert n_distinct <= (N_VLABELS - 1) * n_edge_labels, n_distinct
+    out = []
+    for i in range(n_tenants):
+        wild = QueryGraph.WILDCARD
+        if i < n_shared:
+            labels, elabels = (0, 1, 2, 0), (wild, wild, wild)
+        else:
+            d = i - n_shared
+            a = 1 + d % (N_VLABELS - 1)
+            labels = (a, (a + 1) % N_VLABELS, (a + 2) % N_VLABELS, a)
+            elabels = (d // (N_VLABELS - 1), wild, wild)
+        out.append(QueryGraph(4, labels, ((0, 1), (1, 2), (2, 3)),
+                              edge_labels=elabels,
+                              prec=frozenset({(0, 1), (1, 2)})))
+    assert len({(q.vertex_labels, q.edge_labels) for q in out}) == \
+        (1 if n_shared else 0) + n_distinct
+    return out
+
+
+def table_bytes(svc: ContinuousSearchService) -> int:
+    """Device bytes of all partial-match tables: slot groups + forest."""
+    total = sum(x.nbytes
+                for g in svc._iter_groups()
+                for x in jax.tree.leaves(g.sstate))
+    if svc.forest is not None:
+        total += svc.forest_stats().table_bytes
+    return total
+
+
+def bench_config(sharing: bool, n_tenants: int, overlap: float,
+                 n_edges: int, batch: int, tick_cache: SlotTickCache,
+                 warmup_ticks: int = 2) -> dict:
+    stream = synth_traffic_stream(StreamConfig(
+        n_edges=n_edges + warmup_ticks * batch, n_vertices=80,
+        n_vertex_labels=N_VLABELS, n_edge_labels=4, seed=23,
+        ts_step_max=2))
+    svc = ContinuousSearchService(
+        slots_per_group=8, backend=JoinBackend.REF,
+        enable_sharing=sharing, tick_cache=tick_cache, **CAP)
+    for q in tenant_queries(n_tenants, overlap):
+        svc.register(q, WINDOW)
+
+    lat, shared_ticks = [], []
+
+    def on_tick(info):
+        lat.append(info.latency_ms)
+        shared_ticks.append(info.n_shared_prefix_ticks)
+
+    serve = dict(batch_size=batch, min_batch=batch, max_batch=batch,
+                 on_tick=on_tick)
+    svc.serve_stream(stream[:warmup_ticks * batch], **serve)  # compile+warm
+    lat.clear()
+    shared_ticks.clear()
+    t0 = time.perf_counter()
+    svc.serve_stream(stream[warmup_ticks * batch:], **serve)
+    wall = time.perf_counter() - t0
+
+    fs = svc.forest_stats()
+    lat_sorted = sorted(lat)
+    return {
+        "bench": "share_tick",
+        "sharing": sharing,
+        "n_tenants": n_tenants,
+        "overlap": overlap,
+        "n_groups": len(svc._iter_groups()),
+        "n_prefix_nodes": 0 if fs is None else fs.n_nodes,
+        "n_shared_prefix_ticks": (shared_ticks[0] if shared_ticks else 0),
+        "batch": batch,
+        "n_edges": n_edges,
+        "n_ticks": len(lat),
+        "edges_per_s": round(n_edges / wall, 1),
+        "ms_per_tick_mean": round(sum(lat) / max(1, len(lat)), 3),
+        "ms_per_tick_p50": round(lat_sorted[len(lat) // 2], 3) if lat else 0.0,
+        "table_bytes": table_bytes(svc),
+    }
+
+
+def bench_share_json(reduced: bool = True, dry: bool = False) -> str:
+    """Assemble and write ``BENCH_share.json`` at the repo root."""
+    if dry:
+        n_tenants, overlaps, n_edges, batch = 4, [1.0], 256, 32
+    elif reduced:
+        n_tenants, overlaps, n_edges, batch = 8, [0.0, 0.5, 1.0], 2048, 64
+    else:
+        n_tenants, overlaps, n_edges, batch = 16, [0.0, 0.25, 0.5, 0.75,
+                                                   1.0], 16384, 128
+
+    tc = SlotTickCache()
+    results, speedups = [], []
+    for overlap in overlaps:
+        pair = {}
+        for sharing in (False, True):
+            row = bench_config(sharing, n_tenants, overlap, n_edges, batch,
+                               tc)
+            results.append(row)
+            pair[sharing] = row
+        speedups.append({
+            "n_tenants": n_tenants,
+            "overlap": overlap,
+            "tick_speedup": round(
+                pair[False]["ms_per_tick_mean"]
+                / max(pair[True]["ms_per_tick_mean"], 1e-9), 3),
+            "bytes_ratio": round(
+                pair[True]["table_bytes"]
+                / max(pair[False]["table_bytes"], 1), 4),
+        })
+
+    doc = {
+        "schema": "bench_share/v1",
+        "mode": "dry" if dry else ("reduced" if reduced else "full"),
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "note": ("shared vs unshared serve_stream tick cost and device "
+                 "table bytes at N tenants x prefix-overlap fraction; "
+                 "overlapping tenants alias one SharedPrefixForest node "
+                 "chain (repro.core.share), the rest pay their own"),
+        "results": results,
+        "speedups": speedups,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# BENCH_share.json -> {JSON_PATH} ({len(results)} rows)")
+    for s in speedups:
+        print(f"#   share_tick overlap={s['overlap']}: "
+              f"{s['tick_speedup']}x tick speedup, "
+              f"{s['bytes_ratio']}x table bytes "
+              f"({n_tenants} tenants)")
+    return JSON_PATH
+
+
+if __name__ == "__main__":
+    bench_share_json()

@@ -5,12 +5,16 @@
 machine-readable trajectories go to the repo root: ``BENCH_join.json``
 (kernel-level: backend × shape × slot-count timings plus the fused
 compat_join_pairs vs mask+nonzero bytes model — see
-``benchmarks.bench_kernels.bench_join_json``) and ``BENCH_tick.json``
+``benchmarks.bench_kernels.bench_join_json``), ``BENCH_tick.json``
 (engine-level: end-to-end ``serve_stream`` tick cost per backend through
-the ``repro.api`` session — see ``benchmarks.bench_service``).
+the ``repro.api`` session — see ``benchmarks.bench_service``) and
+``BENCH_share.json`` (cross-tenant prefix sharing: shared vs unshared
+tick cost and table bytes at N tenants × overlap fraction — see
+``benchmarks.bench_share``).
 
-``--dry`` is the CI smoke mode: tiny shapes, only the join + tick
-benches, but the same JSON schemas, so the emission paths can't rot.
+``--dry`` is the CI smoke mode: tiny shapes, only the join + tick +
+share benches, but the same JSON schemas, so the emission paths can't
+rot.
 
 The roofline/dry-run tables (EXPERIMENTS.md §Dry-run/§Roofline) are
 produced separately by ``python -m repro.launch.dryrun --all`` and
@@ -22,7 +26,13 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import bench_engine, bench_kernels, bench_multiquery, bench_service
+from benchmarks import (
+    bench_engine,
+    bench_kernels,
+    bench_multiquery,
+    bench_service,
+    bench_share,
+)
 
 
 def main() -> None:
@@ -39,6 +49,7 @@ def main() -> None:
     if args.dry:
         bench_kernels.bench_join_json(reduced=True, dry=True)
         bench_service.bench_tick_json(reduced=True, dry=True)
+        bench_share.bench_share_json(reduced=True, dry=True)
         print(f"# total bench wall time: {time.time() - t0:.1f}s")
         return
 
@@ -52,6 +63,7 @@ def main() -> None:
     bench_kernels.compat_join_scaling(reduced)
     bench_kernels.bench_join_json(reduced=reduced)    # BENCH_join.json
     bench_service.bench_tick_json(reduced=reduced)    # BENCH_tick.json
+    bench_share.bench_share_json(reduced=reduced)     # BENCH_share.json
     bench_multiquery.main(                            # multi-tenant serving
         n_queries=6 if reduced else 12,
         n_edges=3000 if reduced else 20000)

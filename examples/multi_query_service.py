@@ -16,7 +16,11 @@ Demonstrates the ``repro.api`` surface end-to-end (the session drives
      comes back under its original subscription with the same label
      vocabulary, the compiled ticks come from the process-wide
      SlotTickCache (zero recompiles), and replaying the unserved tail
-     of the stream misses nothing still inside the window.
+     of the stream misses nothing still inside the window;
+  5. cross-tenant prefix sharing (``share_prefixes=True``): two tenants
+     whose patterns share a timing-chain prefix alias ONE set of device
+     tables for it (a refcounted SharedPrefixForest node chain advanced
+     once per tick) — the forest stats show the dedup.
 
 Run:  PYTHONPATH=src python examples/multi_query_service.py
 """
@@ -110,6 +114,45 @@ def main():
           f"reauthored={len(sub_c2.matches())}")
     print(f"total slot-group compiles for 3 tenants + churn + crash/"
           f"restore: {sess.service.n_compiles}")
+
+    # ---- cross-tenant prefix sharing ------------------------------------
+    # Two intrusion patterns that agree on their first two hops: a full
+    # exfil chain (recon -> staging -> exfil) and the shorter staging
+    # detector.  With share_prefixes=True the engine CSEs the common
+    # 2-edge prefix: ONE shared expansion-list chain serves both tenants,
+    # advanced once per tick; the exfil tenant runs only its third hop.
+    shared = StreamSession(share_prefixes=True, level_capacity=4096,
+                           l0_capacity=4096, max_new=1024)
+    exfil = (Pattern("exfil-chain")
+             .vertex("recon", label=0).vertex("staging", label=1)
+             .vertex("relay", label=2).vertex("drop", label=0)
+             .edge("recon", "staging").edge("staging", "relay")
+             .edge("relay", "drop")
+             .before(0, 1).before(1, 2)
+             .window(60))
+    staging = (Pattern("staging-only")
+               .vertex("a", label=0).vertex("b", label=1)
+               .vertex("c", label=2)
+               .edge("a", "b").edge("b", "c").before(0, 1)
+               .window(60))
+    sub_x, sub_s = shared.register(exfil), shared.register(staging)
+    fs = shared.service.forest_stats()
+    print(f"\nprefix sharing: {fs.n_nodes} shared tables serve "
+          f"{fs.n_tenants} tenants ({fs.n_shared_nodes} aliased by both, "
+          f"{fs.table_bytes} device bytes)")
+    print(f"  {sub_x.name!r}: prefix depth {sub_x.shared_prefix.depth}, "
+          f"{sub_x.shared_prefix.n_tenants} tenant(s) on its leaf")
+    print(f"  {sub_s.name!r}: prefix depth {sub_s.shared_prefix.depth}, "
+          f"{sub_s.shared_prefix.n_tenants} tenants aliasing its chain")
+    ticks = []
+    counts3 = shared.serve(stream, batch_size=64,
+                           on_tick=lambda i: ticks.append(i))
+    print(f"  served {len(stream)} edges: "
+          f"{counts3.get(sub_x, 0)} exfil + {counts3.get(sub_s, 0)} "
+          f"staging matches, {ticks[0].n_shared_prefix_ticks} shared "
+          f"prefix ticks per engine tick (vs "
+          f"{sub_x.query.n_edges + sub_s.query.n_edges} level advances "
+          f"without sharing)")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,13 @@ admission control off the engine's overflow counters (a structure whose
 slot tables have already overflowed stops admitting new tenants instead
 of silently dropping their partial matches).
 
+With ``share_prefixes=True`` the engine additionally CSEs TC-subquery
+prefixes across tenants (``repro.core.share``): tenants whose canonical
+patterns share a prefix alias ONE set of device tables for it, advanced
+once per tick.  ``Subscription.shared_prefix`` reports the dedup
+(externalized depth, co-tenant count), and ``ServeInfo.
+n_shared_prefix_ticks`` counts the per-tick shared-table advances.
+
 Checkpoints written by a session carry the session's own state (vocab +
 per-subscription pattern plans) inside the service manifest, so
 ``StreamSession.restore`` rebuilds the full typed surface — original
@@ -125,10 +132,20 @@ class Subscription:
 
     @property
     def n_overflow(self) -> int:
-        """Cumulative engine-side overflow for this tenant's tables."""
+        """Cumulative engine-side overflow for this tenant's tables
+        (including, under prefix sharing, its shared prefix chain)."""
         if self._closed:
             return 0
-        return int(self.session.service.stats(self.qid).n_overflow)
+        return self.session.service.tenant_overflow(self.qid)
+
+    @property
+    def shared_prefix(self):
+        """``SharedPrefixInfo`` (depth / co-tenants / epoch) when the
+        session shares TC-subquery prefixes across tenants
+        (``share_prefixes=True``), else None."""
+        if self._closed:
+            return None
+        return self.session.service.shared_prefix(self.qid)
 
     @property
     def status(self) -> str:
@@ -214,6 +231,7 @@ class StreamSession:
         ckpt_dir: str | None = None,
         keep_checkpoints: int = 8,
         tick_cache=None,
+        share_prefixes: bool = False,
         _service: ContinuousSearchService | None = None,
     ):
         if _service is None:
@@ -228,6 +246,7 @@ class StreamSession:
                 ckpt_dir=ckpt_dir,
                 keep_checkpoints=keep_checkpoints,
                 tick_cache=tick_cache,
+                enable_sharing=share_prefixes,
             )
         self.service = _service
         self.vocab = LabelVocab()

@@ -18,6 +18,9 @@ multi       Multi-query fusion: ``build_multi_tick`` (one label-match
             same-structure query slots; recompile-free registration).
 registry    ``QueryRegistry``: standing-query lifecycle + structural
             plan signatures used to bucket queries into slot groups.
+share       Cross-tenant prefix sharing: ``SharedPrefixForest`` CSEs
+            TC-subquery prefixes across registered queries (refcounted
+            shared expansion-list tables, advanced once per tick).
 oracle      Exact pure-Python reference engine used as the test oracle.
 sjtree      SJ-tree baseline (Choudhury et al. 2015) + timing post-filter.
 distributed shard_map-wrapped tick for multi-device execution.
@@ -34,3 +37,9 @@ from repro.core.multi import (
     init_multi_state,
 )
 from repro.core.registry import QueryRegistry, plan_signature
+from repro.core.share import (
+    ForestStats,
+    SharedPrefixForest,
+    SharedPrefixInfo,
+    prefix_chain,
+)

@@ -157,6 +157,7 @@ def build_tick_body(
     max_out: int | None = None,
     axis_name: str | None = None,
     n_shards: int = 1,
+    prefix_depth: int = 0,
 ):
     """Compile the *structural* part of ``plan`` into a tick body.
 
@@ -170,7 +171,27 @@ def build_tick_body(
     padded-slot ``build_slot_tick`` (repro.core.multi) all share this
     body, which is what makes the multi-query oracle equivalence hold by
     construction.
+
+    With ``prefix_depth > 0`` (cross-tenant prefix sharing,
+    ``repro.core.share``), the first ``prefix_depth`` levels of subquery
+    0's expansion list live in a shared prefix table advanced elsewhere,
+    and the body signature becomes ``body(state, batch, ematch, window,
+    prefix_view)``: ``state`` holds only subquery 0's *suffix* levels
+    (``init_state(plan, prefix_depth)``) and ``prefix_view`` is the
+    shared table's post-append view for this tick (``repro.core.share.
+    NodeView``: denormalized bind/ets plus pre- and post-expiry
+    validity).  Semantics per tenant are exactly those of the unshared
+    body — the view IS what the local level-``prefix_depth`` recon would
+    have been.
     """
+    if prefix_depth:
+        if axis_name is not None:
+            raise ValueError(
+                "prefix sharing is not supported under shard_map")
+        if not (0 < prefix_depth <= len(plan.subqueries[0].levels)):
+            raise ValueError(
+                f"prefix_depth {prefix_depth} out of range for subquery 0 "
+                f"({len(plan.subqueries[0].levels)} levels)")
     max_out = max_out or max(js.max_new for js in plan.l0_joins) if plan.l0_joins \
         else (max_out or plan.subqueries[0].levels[-1].max_new)
 
@@ -196,17 +217,20 @@ def build_tick_body(
     nv_final = len(plan.final_vertex_layout)
     ne_final = len(plan.final_edge_layout)
 
-    def _expire(levels, l0, lo):
+    def _expire(levels, l0, lo, prefix_valid_after=None):
         """End-of-tick deletion (paper §4.2): level-ordered top-down cascade
         over MS-tree parent pointers; L0 rows checked directly on their
-        denormalized per-edge timestamps."""
+        denormalized per-edge timestamps.  With a shared prefix
+        (``prefix_depth > 0``), subquery 0's first retained level cascades
+        from the shared prefix table's post-expiry validity instead of a
+        local parent level."""
         new_levels = []
-        for sub in levels:
+        for si, sub in enumerate(levels):
             out = []
-            prev_valid = None
-            for j, t in enumerate(sub):
+            prev_valid = prefix_valid_after if si == 0 else None
+            for t in sub:
                 v = t.valid & (t.ts > lo)
-                if j > 0:
+                if prev_valid is not None:
                     v = v & jnp.take(prev_valid, jnp.maximum(t.parent, 0),
                                      mode="clip")
                 out.append(t._replace(valid=v))
@@ -218,7 +242,8 @@ def build_tick_body(
         )
         return tuple(new_levels), new_l0
 
-    def body(state: EngineState, batch: EdgeBatch, ematch, window):
+    def body(state: EngineState, batch: EdgeBatch, ematch, window,
+             prefix_view=None):
         # -- 0. advance time; clear last tick's fresh marks ------------ #
         # NOTE: expiry is deferred to the END of the tick.  Mid-tick, the
         # window-span predicate inside every join plays the role of the
@@ -255,7 +280,18 @@ def build_tick_body(
         for si, s in enumerate(plan.subqueries):
             sub = list(levels[si])
             sub_recons: list[_View] = []
-            for li, lv in enumerate(s.levels):
+            start = prefix_depth if si == 0 else 0
+            if start:
+                # subquery 0's first `prefix_depth` levels live in a
+                # shared prefix table (repro.core.share); its post-append
+                # view seeds the reconstruction chain exactly where the
+                # local level-`start-1` recon would have
+                sub_recons.append(_View(prefix_view.bind, prefix_view.ets,
+                                        prefix_view.valid,
+                                        prefix_view.fresh))
+            for li in range(start, len(s.levels)):
+                lv = s.levels[li]
+                ti = li - start          # index into the (suffix) tables
                 em = ematch[lv.qedge]
                 if li == 0:
                     t, nd = _append_level(
@@ -264,28 +300,28 @@ def build_tick_body(
                     sub[0] = t
                     n_overflow += nd
                 else:
-                    prev = sub_recons[li - 1]
+                    prev = sub_recons[-1]
                     a_idx, b_idx, pv, nd1 = J.join_pairs(
                         prev.bind, prev.ets, prev.valid,
                         bbind, bets, em,
                         level_rel[(si, li)], _trel_chain(prev.ets.shape[1]),
                         lv.max_new, window, backend)
                     t, nd2 = _append_level(
-                        sub[li], a_idx,
+                        sub[ti], a_idx,
                         jnp.take(batch.src, b_idx, mode="clip"),
                         jnp.take(batch.dst, b_idx, mode="clip"),
                         jnp.take(batch.ts, b_idx, mode="clip"),
                         pv)
-                    sub[li] = t
+                    sub[ti] = t
                     n_overflow += nd1 + nd2
                 # reconstruct this level's denormalized view (post-append)
-                t = sub[li]
+                t = sub[ti]
                 if li == 0:
                     bind = jnp.stack([t.src, t.dst], axis=1)
                     ets = t.ts[:, None]
                 else:
                     p = jnp.maximum(t.parent, 0)
-                    prevv = sub_recons[li - 1]
+                    prevv = sub_recons[-1]
                     cols = [jnp.take(prevv.bind, p, axis=0)]
                     own = []
                     if lv.src_slot < 0:
@@ -373,7 +409,9 @@ def build_tick_body(
             mv = jnp.zeros((max_out,), jnp.bool_)
 
         # -- 5. end-of-tick expiry ------------------------------------- #
-        levels, l0 = _expire(levels, l0, t_now - window)
+        levels, l0 = _expire(
+            levels, l0, t_now - window,
+            prefix_view.valid_after if prefix_depth else None)
 
         if axis_name is not None:
             n_overflow = jax.lax.psum(n_overflow, axis_name)
@@ -440,12 +478,35 @@ def build_tick(
     return tick
 
 
+def fold_level_host(acc, table, src_slot: int, dst_slot: int):
+    """One step of the host-side MS-tree denormalization: fold a level
+    table's (src, dst, ts, parent) onto its parent level's accumulated
+    ``(bind, ets)`` (``acc=None`` for a root level).  Own columns are
+    appended only for NEGATIVE slots, src before dst — the single
+    layout rule every host-side reconstruction must agree on
+    (``current_matches`` and the shared-prefix paths in
+    ``repro.core.share`` all route through here)."""
+    src = np.asarray(table.src)[:, None]
+    dst = np.asarray(table.dst)[:, None]
+    ts = np.asarray(table.ts)[:, None]
+    if acc is None:
+        return np.concatenate([src, dst], axis=1), ts
+    bind, ets = acc
+    p = np.maximum(np.asarray(table.parent), 0)
+    own = []
+    if src_slot < 0:
+        own.append(src)
+    if dst_slot < 0:
+        own.append(dst)
+    return (np.concatenate([bind[p]] + own, axis=1),
+            np.concatenate([ets[p], ts], axis=1))
+
+
 def current_matches(plan: ExecutionPlan, state: EngineState):
     """All complete matches in the current window (host-side; for tests).
 
     Returns a set of frozensets of ``(query_edge_id, (src, dst, ts))``.
     """
-    q = plan.query
     if plan.l0_joins:
         tbl = state.l0[-1]
         bind = np.asarray(tbl.bindings)
@@ -455,26 +516,20 @@ def current_matches(plan: ExecutionPlan, state: EngineState):
         # reconstruct the single subquery's final level on host
         s = plan.subqueries[0]
         sub = state.levels[0]
-        bind, ets = None, None
+        acc = None
         for li, lv in enumerate(s.levels):
-            t = sub[li]
-            src = np.asarray(t.src)[:, None]
-            dst = np.asarray(t.dst)[:, None]
-            ts = np.asarray(t.ts)[:, None]
-            if li == 0:
-                bind = np.concatenate([src, dst], axis=1)
-                ets = ts
-            else:
-                p = np.maximum(np.asarray(t.parent), 0)
-                own = []
-                if lv.src_slot < 0:
-                    own.append(src)
-                if lv.dst_slot < 0:
-                    own.append(dst)
-                bind = np.concatenate([bind[p]] + own, axis=1)
-                ets = np.concatenate([ets[p], ts], axis=1)
+            acc = fold_level_host(acc, sub[li], lv.src_slot, lv.dst_slot)
+        bind, ets = acc
         valid = np.asarray(sub[-1].valid)
 
+    return matches_from_rows(plan, bind, ets, valid)
+
+
+def matches_from_rows(plan: ExecutionPlan, bind, ets, valid):
+    """Convert final-layout match rows to the canonical frozenset form
+    shared with the oracle (host-side helper for ``current_matches`` and
+    the shared-prefix reconstruction in ``repro.core.share``)."""
+    q = plan.query
     vlayout = plan.final_vertex_layout
     elayout = plan.final_edge_layout
     out = set()

@@ -171,10 +171,12 @@ def stack_states(states: Sequence[EngineState]) -> EngineState:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
-def init_slot_state(template_plan: ExecutionPlan, n_slots: int) -> SlotState:
+def init_slot_state(template_plan: ExecutionPlan, n_slots: int,
+                    prefix_depth: int = 0) -> SlotState:
     nq = template_plan.query.n_edges
     return SlotState(
-        engines=stack_states([init_state(template_plan)] * n_slots),
+        engines=stack_states(
+            [init_state(template_plan, prefix_depth)] * n_slots),
         params=SlotParams(
             esl=jnp.zeros((n_slots, nq), I32),
             edl=jnp.zeros((n_slots, nq), I32),
@@ -237,6 +239,7 @@ def build_slot_tick(
     backend: str = J.JoinBackend.REF,
     extract_matches: bool = True,
     max_out: int | None = None,
+    prefix_depth: int = 0,
 ):
     """Compile a padded-slot tick for one structural template.
 
@@ -246,23 +249,60 @@ def build_slot_tick(
     from the stacked ``[S, n_qedges]`` label arrays; the structural body
     is vmapped over slots.  Inactive slots process nothing (their mask
     is zeroed) and their tables stay empty.
+
+    With ``prefix_depth > 0`` (cross-tenant prefix sharing,
+    ``repro.core.share``) the tick signature becomes ``tick(sstate,
+    batch, prefix_view)``: every slot consumes the SAME shared prefix
+    table view (vmap-broadcast), and the per-slot bodies run only the
+    suffix joins.  Results and stats of unarmed slots are masked — the
+    shared view is nonzero input even for slots that hold no tenant.
     """
     body = build_tick_body(template_plan, backend=backend,
-                           extract_matches=extract_matches, max_out=max_out)
+                           extract_matches=extract_matches, max_out=max_out,
+                           prefix_depth=prefix_depth)
 
-    def one(engine, batch, esl, edl, eel, window, active):
-        # unarmed slots see an all-invalid batch (no stats drift, frozen
-        # t_now) in addition to the zeroed match mask
+    if prefix_depth == 0:
+        def one(engine, batch, esl, edl, eel, window, active):
+            # unarmed slots see an all-invalid batch (no stats drift,
+            # frozen t_now) in addition to the zeroed match mask
+            b_s = batch._replace(valid=batch.valid & active)
+            em = edge_match_mask(b_s, esl, edl, eel) & active
+            return body(engine, b_s, em, window)
+
+        vbody = jax.vmap(one, in_axes=(0, None, 0, 0, 0, 0, 0))
+
+        def tick(sstate: SlotState, batch: EdgeBatch):
+            p = sstate.params
+            engines, results = vbody(
+                sstate.engines, batch, p.esl, p.edl, p.eel, p.window,
+                p.active)
+            return sstate._replace(engines=engines), results
+
+        return tick
+
+    def one(engine, batch, esl, edl, eel, window, active, prefix_view):
         b_s = batch._replace(valid=batch.valid & active)
         em = edge_match_mask(b_s, esl, edl, eel) & active
-        return body(engine, b_s, em, window)
+        s, r = body(engine, b_s, em, window, prefix_view)
+        # a fully-shared subquery 0 feeds every slot the shared rows, so
+        # unarmed slots must mask their outputs AND their stats (the
+        # zeroed batch alone no longer freezes them)
+        s = s._replace(stats=jax.tree.map(
+            lambda new, old: jnp.where(active, new, old),
+            s.stats, engine.stats))
+        r = r._replace(
+            n_new_matches=jnp.where(active, r.n_new_matches, 0),
+            n_overflow=jnp.where(active, r.n_overflow, 0),
+            match_valid=r.match_valid & active)
+        return s, r
 
-    vbody = jax.vmap(one, in_axes=(0, None, 0, 0, 0, 0, 0))
+    vbody = jax.vmap(one, in_axes=(0, None, 0, 0, 0, 0, 0, None))
 
-    def tick(sstate: SlotState, batch: EdgeBatch):
+    def tick(sstate: SlotState, batch: EdgeBatch, prefix_view):
         p = sstate.params
         engines, results = vbody(
-            sstate.engines, batch, p.esl, p.edl, p.eel, p.window, p.active)
+            sstate.engines, batch, p.esl, p.edl, p.eel, p.window, p.active,
+            prefix_view)
         return sstate._replace(engines=engines), results
 
     return tick
@@ -313,24 +353,10 @@ class SlotTickCache:
         """The cached (possibly jitted) tick callables."""
         return list(self._ticks.values())
 
-    def get(
-        self,
-        template_plan: ExecutionPlan,
-        backend: str = J.JoinBackend.REF,
-        extract_matches: bool = True,
-        max_out: int | None = None,
-        jit: bool = True,
-        donate: bool = False,
-    ):
-        from repro.core.registry import plan_signature
-
-        key = (plan_signature(template_plan), backend, extract_matches,
-               max_out, jit, donate)
+    def _get(self, key, builder, jit: bool, donate: bool):
         tick = self._ticks.pop(key, None)
         if tick is None:
-            tick = build_slot_tick(
-                template_plan, backend=backend,
-                extract_matches=extract_matches, max_out=max_out)
+            tick = builder()
             if jit:
                 tick = jax.jit(
                     tick, donate_argnums=(0,) if donate else ())
@@ -339,6 +365,47 @@ class SlotTickCache:
         while len(self._ticks) > self.max_entries:
             self._ticks.pop(next(iter(self._ticks)))
         return tick
+
+    def get(
+        self,
+        template_plan: ExecutionPlan,
+        backend: str = J.JoinBackend.REF,
+        extract_matches: bool = True,
+        max_out: int | None = None,
+        jit: bool = True,
+        donate: bool = False,
+        prefix_depth: int = 0,
+    ):
+        from repro.core.registry import plan_signature
+
+        key = (plan_signature(template_plan), backend, extract_matches,
+               max_out, jit, donate, prefix_depth)
+        return self._get(
+            key,
+            lambda: build_slot_tick(
+                template_plan, backend=backend,
+                extract_matches=extract_matches, max_out=max_out,
+                prefix_depth=prefix_depth),
+            jit, donate)
+
+    def get_node(
+        self,
+        spec,                                   # repro.core.share.NodeSpec
+        backend: str = J.JoinBackend.REF,
+        jit: bool = True,
+        donate: bool = False,
+    ):
+        """Compiled prefix-node tick for one structural ``NodeSpec``
+        (the forest's half of the cache's prefix dimension).  Labels and
+        window are runtime inputs, so one entry serves every node of
+        that structure — and restores re-arm forests with cache hits."""
+        from repro.core.share import build_node_tick
+
+        key = ("prefix_node", spec, backend, jit, donate)
+        return self._get(
+            key,
+            lambda: build_node_tick(spec, backend=backend),
+            jit, donate)
 
     def clear(self):
         self._ticks.clear()

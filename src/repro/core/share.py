@@ -1,0 +1,553 @@
+"""Cross-tenant prefix sharing: the ``SharedPrefixForest`` subsystem.
+
+The engine answers each standing query by maintaining expansion lists
+for its TC-subqueries; concurrent tenants overlap heavily in the
+*prefixes* of those lists (the multi-query observation of StreamWorks /
+PNNL's large-scale continuous subgraph queries — see PAPERS.md).  Until
+now every tenant materialized and advanced its own tables, sharing only
+the label-match phase and compiled XLA ticks.  This module adds
+common-subexpression elimination across tenants at the TABLE level:
+
+* ``prefix_chain(plan)`` slices subquery 0's timing sequence into its
+  depth-1..m prefixes and keys each by ``canonical_key`` of the chain-
+  renumbered prefix query (``repro.core.canon``) plus the window span —
+  label-renamed / vertex-relabeled tenants hash to the SAME signature.
+  Because a timing sequence is a ≺-chain, the chain renumbering (vertex
+  ids by first appearance, edge ids by chain position) is *forced* by
+  the isomorphism, so equal signatures imply literally identical prefix
+  queries — and therefore bit-identical expansion-list tables.
+
+* ``SharedPrefixForest`` is a refcounted trie of ``PrefixNode``s: one
+  ``LevelTable`` per (prefix signature, epoch), advanced ONCE per tick
+  by a dedicated prefix tick in depth order.  A tenant acquires the
+  whole chain for its subquery 0 and its slot tick consumes the leaf's
+  per-tick ``NodeView`` (``build_tick_body(prefix_depth=...)``), running
+  only the suffix joins.  Partial overlap shares partially: a 3-chain
+  tenant and a 2-chain tenant alias the depth-1/2 nodes and diverge at
+  depth 3.
+
+* *Epochs* keep per-tenant registration-time semantics exact: a node
+  created at stream offset ``o`` contains precisely the partial matches
+  a tenant registered at ``o`` would have built alone, so only tenants
+  registered at the same offset may alias it.  This is what makes the
+  sharing-enabled engine oracle-multiset-exact under churn — a tenant
+  arriving mid-stream gets fresh nodes instead of inheriting history.
+
+Node ticks are structural (labels and window are runtime inputs), so
+they live in the process-wide ``SlotTickCache`` next to the slot ticks:
+restore-after-crash re-arms the forest with cache hits, zero warm
+recompiles.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import join as J
+from repro.core.canon import canonical_key
+from repro.core.engine import (
+    _append_level,
+    edge_match_mask,
+    fold_level_host,
+    matches_from_rows,
+)
+from repro.core.plan import ExecutionPlan
+from repro.core.query import QueryGraph
+from repro.core.state import EngineState, _empty_level
+
+I32 = jnp.int32
+
+
+class NodeView(NamedTuple):
+    """A prefix node's per-tick export: the denormalized post-append view
+    its consumers join against (suffix ticks and child nodes), plus the
+    post-expiry validity the consumers cascade deletions from."""
+
+    bind: jnp.ndarray         # int32 [C, nv]   pre-expiry, post-append
+    ets: jnp.ndarray          # int32 [C, ne]
+    valid: jnp.ndarray        # bool  [C]       pre-expiry
+    fresh: jnp.ndarray        # bool  [C]       appended this tick
+    valid_after: jnp.ndarray  # bool  [C]       post-expiry (cascaded)
+
+
+class NodeState(NamedTuple):
+    """Device state of one prefix node: one expansion-list level table."""
+
+    table: object             # repro.core.state.LevelTable
+    t_now: jnp.ndarray        # int32 scalar
+    n_overflow: jnp.ndarray   # int32 scalar, cumulative dropped appends
+
+
+class NodeSpec(NamedTuple):
+    """Structural identity of a node tick (the SlotTickCache key part).
+
+    ``parent_ne == 0`` marks a root (depth-1) node; labels and window are
+    runtime inputs, so one compiled node tick serves every label/window
+    variant of the same structure."""
+
+    parent_nv: int            # prefix layout width at depth-1 (0 at root)
+    parent_ne: int            # = depth - 1
+    src_slot: int             # this edge's src slot in the parent layout
+    dst_slot: int             # (-1 = new vertex)
+    capacity: int
+    max_new: int
+
+
+class SharedPrefixInfo(NamedTuple):
+    """Per-tenant sharing stats (``Subscription.shared_prefix``)."""
+
+    depth: int                # externalized levels of subquery 0
+    n_tenants: int            # tenants aliasing this tenant's leaf node
+    epoch: int                # stream offset the node chain started at
+
+
+class ForestStats(NamedTuple):
+    n_nodes: int              # live prefix tables
+    n_shared_nodes: int       # nodes aliased by more than one tenant
+    n_tenants: int            # acquired (live) tenant handles
+    table_bytes: int          # device bytes held by all node tables
+
+
+class PrefixChain(NamedTuple):
+    """Host-side description of a plan's shareable prefixes."""
+
+    sigs: tuple               # per-depth signature (canonical_key, window)
+    queries: tuple            # per-depth chain-renumbered QueryGraph
+    depth: int                # = len(subquery 0 timing sequence)
+
+
+def prefix_chain(plan: ExecutionPlan) -> PrefixChain:
+    """Slice subquery 0's timing sequence into canonical prefixes.
+
+    The depth-``j`` prefix query renumbers vertices by first appearance
+    and edges by chain position with the chain precedence — a forced
+    renumbering, so isomorphic prefixes produce *identical* graphs; the
+    signature still goes through ``canonical_key`` so the dedup contract
+    is exactly the planner's isomorphism-class identity.
+    """
+    q = plan.query
+    seq = plan.subqueries[0].timing_sequence
+    vmap: dict[int, int] = {}
+    edges: list[tuple[int, int]] = []
+    vlabels: list[int] = []
+    elabels: list[int] = []
+    sigs, queries = [], []
+    for j, eid in enumerate(seq):
+        u, v = q.edges[eid]
+        for x in (u, v):
+            if x not in vmap:
+                vmap[x] = len(vmap)
+                vlabels.append(q.vertex_labels[x])
+        edges.append((vmap[u], vmap[v]))
+        elabels.append(q.edge_labels[eid])
+        pq = QueryGraph(
+            n_vertices=len(vmap),
+            vertex_labels=tuple(vlabels),
+            edges=tuple(edges),
+            edge_labels=tuple(elabels),
+            prec=frozenset((i, i + 1) for i in range(j)),
+        )
+        queries.append(pq)
+        sigs.append((canonical_key(pq), int(plan.window)))
+    return PrefixChain(tuple(sigs), tuple(queries), len(seq))
+
+
+def node_spec(plan: ExecutionPlan, j: int) -> NodeSpec:
+    """Structural spec of the depth-``j+1`` node of ``plan``'s chain.
+    Equal across every tenant sharing the depth-``j+1`` signature (the
+    layout slot positions are forced by the chain renumbering)."""
+    s0 = plan.subqueries[0]
+    lv = s0.levels[j]
+    return NodeSpec(
+        parent_nv=len(s0.levels[j - 1].vertex_layout) if j else 0,
+        parent_ne=j,
+        src_slot=lv.src_slot,
+        dst_slot=lv.dst_slot,
+        capacity=lv.capacity,
+        max_new=lv.max_new,
+    )
+
+
+def init_node_state(spec: NodeSpec) -> NodeState:
+    # distinct zero buffers: donated ticks may not alias two arguments
+    return NodeState(table=_empty_level(spec.capacity),
+                     t_now=jnp.zeros((), I32),
+                     n_overflow=jnp.zeros((), I32))
+
+
+def build_node_tick(spec: NodeSpec, backend: str = J.JoinBackend.REF):
+    """Compile the per-tick advance of one prefix node.
+
+    Root:   ``tick(state, batch, esl, edl, eel, window)``
+    Child:  ``tick(state, batch, parent_view, esl, edl, eel, window)``
+
+    Both return ``(state, NodeView, n_overflow_this_tick)``.  The label
+    scalars and the window are runtime inputs (same contract as the slot
+    ticks), so the compiled tick — and its XLA traces — are shared by
+    every same-structure node in the process.  Semantics mirror one
+    level of ``build_tick_body`` exactly: append against the parent's
+    post-append view (the batched image of the paper's lock wait-lists),
+    export the pre-expiry view, expire at end of tick with the cascade
+    from the parent's post-expiry validity.
+    """
+
+    def _advance_time(state, batch):
+        bt = jnp.where(batch.valid, batch.ts, jnp.iinfo(jnp.int32).min)
+        t_now = jnp.maximum(state.t_now, jnp.max(bt))
+        table = state.table._replace(
+            fresh=jnp.zeros_like(state.table.fresh))
+        return t_now, table
+
+    if spec.parent_ne == 0:                      # depth-1 root
+        def tick(state: NodeState, batch, esl, edl, eel, window):
+            em = edge_match_mask(batch, esl[None], edl[None], eel[None])[0]
+            t_now, table = _advance_time(state, batch)
+            table, nd = _append_level(
+                table, jnp.full_like(batch.src, -1),
+                batch.src, batch.dst, batch.ts, em)
+            bind = jnp.stack([table.src, table.dst], axis=1)
+            ets = table.ts[:, None]
+            lo = t_now - window
+            valid_after = table.valid & (table.ts > lo)
+            view = NodeView(bind, ets, table.valid, table.fresh, valid_after)
+            return (NodeState(table._replace(valid=valid_after), t_now,
+                              state.n_overflow + nd), view, nd)
+        return tick
+
+    rel = np.zeros((spec.parent_nv, 2), dtype=bool)
+    if spec.src_slot >= 0:
+        rel[spec.src_slot, 0] = True
+    if spec.dst_slot >= 0:
+        rel[spec.dst_slot, 1] = True
+    trel = np.zeros((spec.parent_ne, 1), dtype=np.int8)
+    trel[-1, 0] = -1                             # ≺-chain: last edge only
+
+    def tick(state: NodeState, batch, parent: NodeView, esl, edl, eel,
+             window):
+        em = edge_match_mask(batch, esl[None], edl[None], eel[None])[0]
+        t_now, table = _advance_time(state, batch)
+        bbind = jnp.stack([batch.src, batch.dst], axis=1)
+        bets = batch.ts[:, None]
+        a_idx, b_idx, pv, nd1 = J.join_pairs(
+            parent.bind, parent.ets, parent.valid, bbind, bets, em,
+            rel, trel, spec.max_new, window, backend)
+        table, nd2 = _append_level(
+            table, a_idx,
+            jnp.take(batch.src, b_idx, mode="clip"),
+            jnp.take(batch.dst, b_idx, mode="clip"),
+            jnp.take(batch.ts, b_idx, mode="clip"),
+            pv)
+        p = jnp.maximum(table.parent, 0)
+        own = []
+        if spec.src_slot < 0:
+            own.append(table.src[:, None])
+        if spec.dst_slot < 0:
+            own.append(table.dst[:, None])
+        bind = jnp.concatenate([jnp.take(parent.bind, p, axis=0)] + own,
+                               axis=1)
+        ets = jnp.concatenate(
+            [jnp.take(parent.ets, p, axis=0), table.ts[:, None]], axis=1)
+        lo = t_now - window
+        valid_after = (table.valid & (table.ts > lo)
+                       & jnp.take(parent.valid_after, p, mode="clip"))
+        view = NodeView(bind, ets, table.valid, table.fresh, valid_after)
+        nd = nd1 + nd2
+        return (NodeState(table._replace(valid=valid_after), t_now,
+                          state.n_overflow + nd), view, nd)
+    return tick
+
+
+@dataclass(eq=False)
+class PrefixNode:
+    """One refcounted prefix table in the forest trie."""
+
+    pid: int                           # stable id (checkpoint manifest key)
+    depth: int                         # 1-based chain length
+    sig: tuple                         # (canonical_key(prefix), window)
+    epoch: int                         # stream offset at creation
+    parent: "PrefixNode | None"
+    spec: NodeSpec
+    query: QueryGraph                  # chain-renumbered prefix query
+    esl: jnp.ndarray                   # int32 scalars: this edge's labels
+    edl: jnp.ndarray
+    eel: jnp.ndarray
+    window: jnp.ndarray                # int32 scalar
+    tick: object                       # SlotTickCache-shared node tick
+    state: NodeState
+    refcount: int = 0
+
+    @property
+    def table_bytes(self) -> int:
+        return sum(x.nbytes for x in jax.tree.leaves(self.state))
+
+
+class SharedPrefixForest:
+    """Refcounted registry of shared prefix tables, advanced once per
+    tick.  Owned by one ``ContinuousSearchService``; node ticks come from
+    the (usually process-wide) ``SlotTickCache``."""
+
+    def __init__(self, tick_cache, backend: str = J.JoinBackend.REF,
+                 jit: bool = True, donate: bool = False):
+        self.tick_cache = tick_cache
+        self.backend = backend
+        self._jit = jit
+        self.donate = donate
+        self._by_key: dict[tuple, PrefixNode] = {}   # (sig, epoch) -> node
+        self._next_pid = 0
+        self._n_handles = 0
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def nodes(self) -> list[PrefixNode]:
+        return sorted(self._by_key.values(), key=lambda n: n.pid)
+
+    def states(self) -> list[NodeState]:
+        return [n.state for n in self.nodes()]
+
+    # ------------------------------------------------------------------ #
+    def _new_node(self, plan: ExecutionPlan, j: int, sig: tuple,
+                  query: QueryGraph, epoch: int,
+                  parent: PrefixNode | None) -> PrefixNode:
+        spec = node_spec(plan, j)
+        eid = plan.subqueries[0].timing_sequence[j]
+        node = PrefixNode(
+            pid=self._next_pid,
+            depth=j + 1,
+            sig=sig,
+            epoch=epoch,
+            parent=parent,
+            spec=spec,
+            query=query,
+            esl=jnp.asarray(plan.edge_src_label[eid], I32),
+            edl=jnp.asarray(plan.edge_dst_label[eid], I32),
+            eel=jnp.asarray(plan.edge_edge_label[eid], I32),
+            window=jnp.asarray(plan.window, I32),
+            tick=self.tick_cache.get_node(
+                spec, backend=self.backend, jit=self._jit,
+                donate=self.donate),
+            state=init_node_state(spec),
+        )
+        self._next_pid += 1
+        return node
+
+    def acquire(self, plan: ExecutionPlan, epoch: int) -> PrefixNode:
+        """Acquire the whole prefix chain of ``plan``'s subquery 0 at
+        ``epoch``; returns the leaf node (depth = full subquery 0).
+        Every node along the chain gains one reference; on failure
+        nothing is retained (references taken on shallower nodes are
+        rolled back), so a raising acquire can never orphan tables."""
+        chain = prefix_chain(plan)
+        parent = None
+        try:
+            for j in range(chain.depth):
+                key = (chain.sigs[j], epoch)
+                node = self._by_key.get(key)
+                if node is None:
+                    node = self._new_node(plan, j, chain.sigs[j],
+                                          chain.queries[j], epoch, parent)
+                    self._by_key[key] = node
+                elif node.spec != node_spec(plan, j):
+                    # unreachable by the chain-renumbering argument; loud
+                    # beats a silently corrupt shared table
+                    raise ValueError(
+                        f"prefix signature collision at depth {j + 1}: "
+                        f"{node.spec} vs {node_spec(plan, j)}")
+                node.refcount += 1
+                parent = node
+        except Exception:
+            node = parent
+            while node is not None:       # roll back the partial chain
+                node.refcount -= 1
+                if node.refcount == 0:
+                    del self._by_key[(node.sig, node.epoch)]
+                node = node.parent
+            raise
+        self._n_handles += 1
+        return parent
+
+    def release(self, leaf: PrefixNode) -> None:
+        """Release one tenant's chain; nodes dropping to zero references
+        are freed (deepest first, so a parent never outlives a child's
+        reference to it)."""
+        node = leaf
+        while node is not None:
+            node.refcount -= 1
+            if node.refcount == 0:
+                del self._by_key[(node.sig, node.epoch)]
+            node = node.parent
+        self._n_handles -= 1
+
+    def adopt(self, leaf: PrefixNode) -> PrefixNode:
+        """Re-reference an existing chain (checkpoint-restore path: the
+        nodes already exist with refcount 0)."""
+        node = leaf
+        while node is not None:
+            node.refcount += 1
+            node = node.parent
+        self._n_handles += 1
+        return leaf
+
+    # ------------------------------------------------------------------ #
+    def advance(self, batch):
+        """One dedicated prefix tick: advance every node once, in depth
+        order (parents before children).  Returns the per-node views and
+        the per-node overflow scalars keyed by pid (device; the service
+        attributes each tenant's chain overflow back onto its
+        ``TickResult`` so results match the unshared engine's counters
+        exactly)."""
+        views: dict[int, NodeView] = {}
+        nds: dict[int, jnp.ndarray] = {}
+        for node in sorted(self._by_key.values(),
+                           key=lambda n: (n.depth, n.pid)):
+            if node.parent is None:
+                node.state, view, nd = node.tick(
+                    node.state, batch, node.esl, node.edl, node.eel,
+                    node.window)
+            else:
+                node.state, view, nd = node.tick(
+                    node.state, batch, views[node.parent.pid],
+                    node.esl, node.edl, node.eel, node.window)
+            views[node.pid] = view
+            nds[node.pid] = nd
+        return views, nds
+
+    @staticmethod
+    def chain_tick_overflow(leaf: PrefixNode, nds: dict):
+        """This tick's dropped appends along ``leaf``'s chain (device
+        scalar) — what each aliasing tenant's own prefix tables would
+        have dropped in an unshared run."""
+        total, node = 0, leaf
+        while node is not None:
+            total = total + nds[node.pid]
+            node = node.parent
+        return total
+
+    # ------------------------------------------------------------------ #
+    def chain_overflow(self, leaf: PrefixNode) -> int:
+        """Cumulative dropped appends along one tenant's chain."""
+        total, node = 0, leaf
+        while node is not None:
+            total += int(np.asarray(node.state.n_overflow))
+            node = node.parent
+        return total
+
+    def total_overflow(self) -> int:
+        return sum(int(np.asarray(n.state.n_overflow))
+                   for n in self._by_key.values())
+
+    def stats(self) -> ForestStats:
+        nodes = list(self._by_key.values())
+        return ForestStats(
+            n_nodes=len(nodes),
+            n_shared_nodes=sum(1 for n in nodes if n.refcount > 1),
+            n_tenants=self._n_handles,
+            table_bytes=sum(n.table_bytes for n in nodes),
+        )
+
+    # ------------------------------------------------------------------ #
+    # checkpoint / restore
+    # ------------------------------------------------------------------ #
+    def to_manifest(self) -> dict:
+        return {
+            "next_pid": self._next_pid,
+            "nodes": [
+                {
+                    "pid": n.pid,
+                    "depth": n.depth,
+                    "epoch": int(n.epoch),
+                    "refcount": int(n.refcount),
+                    "parent": None if n.parent is None else n.parent.pid,
+                    "query": n.query.to_spec(),
+                    "window": int(np.asarray(n.window)),
+                    "spec": list(n.spec),
+                    "labels": [int(np.asarray(n.esl)),
+                               int(np.asarray(n.edl)),
+                               int(np.asarray(n.eel))],
+                }
+                for n in self.nodes()
+            ],
+        }
+
+    def restore_nodes(self, man: dict) -> dict[int, PrefixNode]:
+        """Rebuild the trie skeleton from a checkpoint manifest: nodes
+        come back with their pids/epochs/signatures, EMPTY state (the
+        caller overwrites it from the npz) and refcount 0 (the caller
+        re-adopts one chain per restored tenant and checks the counts
+        against the manifest)."""
+        by_pid: dict[int, PrefixNode] = {}
+        for ent in sorted(man["nodes"], key=lambda e: e["depth"]):
+            spec = NodeSpec(*ent["spec"])
+            query = QueryGraph.from_spec(ent["query"])
+            sig = (canonical_key(query), int(ent["window"]))
+            parent = None if ent["parent"] is None else by_pid[ent["parent"]]
+            esl, edl, eel = ent["labels"]
+            node = PrefixNode(
+                pid=int(ent["pid"]),
+                depth=int(ent["depth"]),
+                sig=sig,
+                epoch=int(ent["epoch"]),
+                parent=parent,
+                spec=spec,
+                query=query,
+                esl=jnp.asarray(esl, I32),
+                edl=jnp.asarray(edl, I32),
+                eel=jnp.asarray(eel, I32),
+                window=jnp.asarray(int(ent["window"]), I32),
+                tick=self.tick_cache.get_node(
+                    spec, backend=self.backend, jit=self._jit,
+                    donate=self.donate),
+                state=init_node_state(spec),
+            )
+            self._by_key[(sig, node.epoch)] = node
+            by_pid[node.pid] = node
+        self._next_pid = max(int(man["next_pid"]),
+                             1 + max(by_pid, default=-1))
+        return by_pid
+
+    # ------------------------------------------------------------------ #
+    # host-side reconstruction (result extraction / tests)
+    # ------------------------------------------------------------------ #
+    def host_table(self, leaf: PrefixNode):
+        """Denormalized (bind, ets, valid) numpy arrays of ``leaf``'s
+        table, reconstructed through the parent chain (root-first folds
+        of the shared layout rule, ``engine.fold_level_host``)."""
+        chain = []
+        node = leaf
+        while node is not None:
+            chain.append(node)
+            node = node.parent
+        chain.reverse()
+        acc = None
+        for n in chain:
+            acc = fold_level_host(acc, n.state.table,
+                                  n.spec.src_slot, n.spec.dst_slot)
+        bind, ets = acc
+        return bind, ets, np.asarray(chain[-1].state.table.valid)
+
+
+def shared_current_matches(plan: ExecutionPlan, leaf: PrefixNode,
+                           forest: SharedPrefixForest,
+                           state: EngineState):
+    """``engine.current_matches`` for a prefix-shared tenant: fold the
+    tenant's suffix levels on top of the shared table's reconstruction.
+    Plans with L0 joins keep their denormalized final table locally, so
+    those read straight from the suffix state."""
+    if plan.l0_joins:
+        from repro.core.engine import current_matches
+        return current_matches(plan, state)
+    s = plan.subqueries[0]
+    depth = leaf.depth
+    bind, ets, valid = forest.host_table(leaf)
+    for ti, li in enumerate(range(depth, len(s.levels))):
+        lv = s.levels[li]
+        t = state.levels[0][ti]
+        bind, ets = fold_level_host((bind, ets), t,
+                                    lv.src_slot, lv.dst_slot)
+        valid = np.asarray(t.valid)
+    return matches_from_rows(plan, bind, ets, valid)

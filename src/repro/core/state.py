@@ -86,10 +86,15 @@ def _empty_l0(capacity: int, nv: int, ne: int) -> L0Table:
     )
 
 
-def init_state(plan: ExecutionPlan) -> EngineState:
+def init_state(plan: ExecutionPlan, prefix_depth: int = 0) -> EngineState:
+    """Empty tables for ``plan``.  With ``prefix_depth > 0`` (cross-tenant
+    prefix sharing, ``repro.core.share``), subquery 0's first that-many
+    levels live in a shared prefix table owned by the forest, so the
+    per-tenant state holds only the suffix levels."""
     levels = tuple(
-        tuple(_empty_level(lv.capacity) for lv in s.levels)
-        for s in plan.subqueries
+        tuple(_empty_level(lv.capacity)
+              for lv in s.levels[(prefix_depth if si == 0 else 0):])
+        for si, s in enumerate(plan.subqueries)
     )
     l0 = tuple(
         _empty_l0(js.capacity, len(js.vertex_layout), len(js.edge_layout))

@@ -22,6 +22,21 @@ Registration / compile budget
   ``n_compiles`` counts those builds for observability.
 * ``unregister(qid)`` disarms the slot (again data-only).
 
+Cross-tenant prefix sharing
+---------------------------
+With ``enable_sharing=True`` the service CSEs TC-subquery prefixes
+across tenants (``repro.core.share``): each registration acquires a
+refcounted chain of ``SharedPrefixForest`` nodes — one expansion-list
+table per canonical prefix signature and registration epoch — and the
+tenant's slot tick consumes the leaf's view, running only its suffix
+joins.  The forest is advanced ONCE per tick by a dedicated prefix tick
+regardless of how many tenants alias each node; slot groups gain a
+prefix dimension (group key = structural signature × prefix node), and
+checkpoints snapshot the forest (tables + refcounts + signatures) so a
+restored service resumes sharing with zero warm recompiles.  Per-tenant
+results are oracle-exact either way; see ``shared_prefix(qid)`` /
+``forest_stats()`` and ``ServeInfo.n_shared_prefix_ticks``.
+
 Serving
 -------
 * ``ingest(batch)`` advances every group's fused tick once and returns
@@ -109,6 +124,11 @@ from repro.core.registry import (
     plan_decomposition,
     plan_signature,
 )
+from repro.core.share import (
+    SharedPrefixForest,
+    SharedPrefixInfo,
+    shared_current_matches,
+)
 from repro.core.state import EdgeBatch, EngineState, init_state, make_batch
 from repro.runtime.straggler import TickCoalescer, quantize_pow2
 from repro.stream.generator import to_batches
@@ -123,6 +143,9 @@ class ServeInfo(NamedTuple):
     chunk: int              # edges consumed by this tick
     latency_ms: float       # barrier latency of this tick (all groups)
     n_overflow: int = 0     # dropped appends this tick, summed over qids
+                            # (shared-prefix drops attributed per tenant,
+                            # matching the unshared engine's counters)
+    n_shared_prefix_ticks: int = 0   # forest nodes advanced this tick
 
 
 @dataclass(eq=False)       # identity semantics: fields hold device arrays
@@ -135,6 +158,8 @@ class _Group:
     sstate: SlotState
     empty: EngineState                # cached init_state(template) for churn
     qids: list = field(default_factory=list)   # qid | None per slot
+    prefix: object = None             # share.PrefixNode leaf | None
+    prefix_depth: int = 0             # externalized subquery-0 levels
 
     def free_slot(self) -> int | None:
         for k, qid in enumerate(self.qids):
@@ -164,6 +189,7 @@ class ContinuousSearchService:
         ckpt_dir: str | None = None,
         keep_checkpoints: int = 8,
         tick_cache: SlotTickCache | None = None,
+        enable_sharing: bool = False,
     ):
         if backend not in (J.JoinBackend.REF, J.JoinBackend.PALLAS,
                            J.JoinBackend.PALLAS_INTERPRET):
@@ -182,8 +208,15 @@ class ContinuousSearchService:
         self.registry = QueryRegistry(
             level_capacity=level_capacity, l0_capacity=l0_capacity,
             max_new=max_new)
+        # group key: (plan_signature, prefix-leaf pid | None) — sharing
+        # adds a prefix dimension to the slot-group layout, since every
+        # slot of one group consumes ONE broadcast prefix view
         self._groups: dict[tuple, list[_Group]] = {}
         self._location: dict[int, tuple[_Group, int]] = {}
+        self.forest = (SharedPrefixForest(
+            self.tick_cache, backend=backend, jit=jit,
+            donate=self.donate) if enable_sharing else None)
+        self._prefix_of: dict[int, object] = {}   # qid -> leaf PrefixNode
         self._next_gid = 0
         self._ckpt_step = 0          # last step id written (monotonic)
         self.n_compiles = 0          # build_slot_tick cache misses (this service)
@@ -204,20 +237,23 @@ class ContinuousSearchService:
         return sorted((g for gs in self._groups.values() for g in gs),
                       key=lambda g: g.gid)
 
-    def _new_group(self, template: ExecutionPlan) -> _Group:
+    def _new_group(self, template: ExecutionPlan, leaf=None) -> _Group:
+        depth = 0 if leaf is None else leaf.depth
         before = self.tick_cache.n_builds
         tick = self.tick_cache.get(
             template, backend=self.backend,
             extract_matches=self.extract_matches, max_out=self.max_out,
-            jit=self._jit, donate=self.donate)
+            jit=self._jit, donate=self.donate, prefix_depth=depth)
         self.n_compiles += self.tick_cache.n_builds - before
         g = _Group(
             gid=self._next_gid,
             template=template,
             tick=tick,
-            sstate=init_slot_state(template, self.slots_per_group),
-            empty=init_state(template),
+            sstate=init_slot_state(template, self.slots_per_group, depth),
+            empty=init_state(template, depth),
             qids=[None] * self.slots_per_group,
+            prefix=leaf,
+            prefix_depth=depth,
         )
         self._next_gid += 1
         return g
@@ -237,14 +273,37 @@ class ContinuousSearchService:
         """
         qid = self.registry.register(query, window, plan=plan)
         rq = self.registry.get(qid)
-        groups = self._groups.setdefault(rq.signature, [])
-        group = next((g for g in groups if g.free_slot() is not None), None)
-        if group is None:
-            group = self._new_group(rq.plan)
-            groups.append(group)
-        k = group.free_slot()
-        group.sstate = write_slot(group.sstate, group.template, k, rq.plan,
-                                  empty=group.empty)
+        leaf, gkey = None, None
+        try:
+            if self.forest is not None:
+                # acquire the prefix chain at the CURRENT stream offset:
+                # only tenants registered at the same offset may alias a
+                # node, so shared tables hold exactly the history each
+                # tenant would have built alone (oracle-exact under churn)
+                leaf = self.forest.acquire(rq.plan,
+                                           epoch=self.n_edges_ingested)
+                self._prefix_of[qid] = leaf
+            gkey = (rq.signature, None if leaf is None else leaf.pid)
+            groups = self._groups.setdefault(gkey, [])
+            group = next((g for g in groups if g.free_slot() is not None),
+                         None)
+            if group is None:
+                group = self._new_group(rq.plan, leaf)
+                groups.append(group)
+            k = group.free_slot()
+            group.sstate = write_slot(group.sstate, group.template, k,
+                                      rq.plan, empty=group.empty)
+        except Exception:
+            # no half-registered tenant: a failure anywhere (chain
+            # acquisition, tick compile, slot write) rolls the qid, any
+            # acquired prefix references, and an empty group-key entry
+            # back out
+            self.registry.unregister(qid)
+            if self._prefix_of.pop(qid, None) is not None:
+                self.forest.release(leaf)
+            if gkey is not None and not self._groups.get(gkey):
+                self._groups.pop(gkey, None)
+            raise
         group.qids[k] = qid
         self._location[qid] = (group, k)
         return qid
@@ -257,19 +316,28 @@ class ContinuousSearchService:
         recently-seen structure can re-register without re-initializing
         device tables.  Use ``drop_idle_groups()`` to reclaim the warm
         groups too (the compiled tick itself stays in the SlotTickCache).
+        Under prefix sharing idle groups are dropped immediately: their
+        prefix node is released with the last tenant, and a later tenant
+        of the same structure starts a fresh epoch (fresh node), so the
+        warm group could never be re-armed.
         """
         group, k = self._location.pop(qid)
         group.sstate = clear_slot(group.sstate, group.template, k,
                                   empty=group.empty)
         group.qids[k] = None
         self.registry.unregister(qid)
+        leaf = self._prefix_of.pop(qid, None)
+        if leaf is not None:
+            self.forest.release(leaf)
         if group.idle:
-            rq_sig = next(
-                sig for sig, gs in self._groups.items() if group in gs)
-            siblings = self._groups[rq_sig]
+            gkey = next(
+                key for key, gs in self._groups.items() if group in gs)
+            siblings = self._groups[gkey]
             n_idle = sum(1 for g in siblings if g.idle)
-            if n_idle > 1:
+            if group.prefix is not None or n_idle > 1:
                 siblings.remove(group)
+                if not siblings:
+                    del self._groups[gkey]
 
     def overflow_pressure(self, signature=None) -> int:
         """Cumulative dropped appends across active tenants — of one
@@ -281,15 +349,29 @@ class ContinuousSearchService:
         api layer refuses to admit more tenants of that structure.
         ONE device read per group (the stacked ``[S]`` overflow counters
         come back in a single transfer; unarmed slots hold zeros) —
-        call at admission/status time, not per tick.
+        call at admission/status time, not per tick.  Under prefix
+        sharing the shared tables drop appends on behalf of every
+        aliasing tenant, so each live group's prefix-chain overflow
+        counts toward its structure's pressure too.
         """
         if signature is not None:
-            groups = self._groups.get(signature, [])
+            groups = [g for (sig, _), gs in self._groups.items()
+                      if sig == signature for g in gs]
         else:
             groups = self._iter_groups()
-        return sum(
+        live = [g for g in groups if not g.idle]
+        total = sum(
             int(np.asarray(g.sstate.engines.stats.n_overflow).sum())
-            for g in groups if not g.idle)
+            for g in live)
+        if self.forest is not None:
+            seen = set()
+            for g in live:
+                node = g.prefix
+                while node is not None and node.pid not in seen:
+                    seen.add(node.pid)
+                    total += int(np.asarray(node.state.n_overflow))
+                    node = node.parent
+        return total
 
     def drop_idle_groups(self) -> int:
         """Release all fully-empty slot groups (device tables); returns
@@ -306,11 +388,34 @@ class ContinuousSearchService:
         return dropped
 
     # ------------------------------------------------------------------ #
-    def _advance_group(self, g: _Group, batch: EdgeBatch):
+    def _advance_forest(self, batch: EdgeBatch):
+        """The dedicated prefix tick: every live forest node advances
+        once per service tick, no matter how many tenants alias it.
+        Returns the per-node views consumed by the groups' suffix ticks
+        plus the nodes' per-tick overflow scalars by pid (device)."""
+        if self.forest is None or not len(self.forest):
+            return {}, {}
+        return self.forest.advance(batch)
+
+    def _advance_group(self, g: _Group, batch: EdgeBatch, views=None,
+                       forest_nds=None):
         """One fused tick for one group.  With ``donate`` the previous
         sstate buffers are consumed — ``g.sstate`` is rebound before this
-        returns, so no caller can observe the donated state."""
-        g.sstate, res = g.tick(g.sstate, batch)
+        returns, so no caller can observe the donated state.
+
+        A shared-prefix group's result comes back with each slot's
+        ``n_overflow`` raised by its chain's drops this tick: the shared
+        table drops on behalf of every aliasing tenant, and per-tenant
+        counters must read as the unshared engine's would.
+        """
+        if g.prefix is not None:
+            g.sstate, res = g.tick(g.sstate, batch, views[g.prefix.pid])
+            chain_nd = self.forest.chain_tick_overflow(g.prefix, forest_nds)
+            res = res._replace(
+                n_overflow=res.n_overflow
+                + jnp.where(g.sstate.params.active, chain_nd, 0))
+        else:
+            g.sstate, res = g.tick(g.sstate, batch)
         return res
 
     def ingest(self, batch) -> dict[int, TickResult]:
@@ -322,11 +427,12 @@ class ContinuousSearchService:
         """
         if not isinstance(batch, EdgeBatch):
             batch = make_batch(**batch)
+        views, forest_nds = self._advance_forest(batch)
         out: dict[int, TickResult] = {}
         for g in self._iter_groups():
             if g.idle:
                 continue
-            res = self._advance_group(g, batch)
+            res = self._advance_group(g, batch, views, forest_nds)
             for k, qid in enumerate(g.qids):
                 if qid is not None:
                     out[qid] = jax.tree.map(lambda x, k=k: x[k], res)
@@ -398,10 +504,13 @@ class ContinuousSearchService:
                 **to_batches(chunk, quantize_pow2(len(chunk)))[0])
             queue_depth = n - (i + len(chunk))
             t0 = time.perf_counter()
-            results = [(g, self._advance_group(g, batch)) for g in active]
-            jax.block_until_ready([g.sstate for g in active])   # the barrier
+            views, forest_nds = self._advance_forest(batch)
+            results = [(g, self._advance_group(g, batch, views, forest_nds))
+                       for g in active]
+            jax.block_until_ready(                              # the barrier
+                [g.sstate for g in active]
+                + ([] if self.forest is None else self.forest.states()))
             lat_ms = (time.perf_counter() - t0) * 1e3
-            coalescer.record(lat_ms, queue_depth)
             tick_overflow = 0
             for g, res in results:
                 for k, qid in enumerate(g.qids):
@@ -416,6 +525,9 @@ class ContinuousSearchService:
                         on_match(qid,
                                  np.asarray(r.match_bindings)[valid],
                                  np.asarray(r.match_ets)[valid])
+            # overflow joins latency and queue depth as a throttle input:
+            # dropped appends mean the tick was too big for the tables
+            coalescer.record(lat_ms, queue_depth, tick_overflow)
             i += len(chunk)
             self.n_ticks += 1
             self.n_edges_ingested += len(chunk)
@@ -428,6 +540,7 @@ class ContinuousSearchService:
                     chunk=len(chunk),
                     latency_ms=lat_ms,
                     n_overflow=tick_overflow,
+                    n_shared_prefix_ticks=len(views),
                 ))
         if self.ckpt:
             if ckpt_every and final_checkpoint and \
@@ -458,6 +571,7 @@ class ContinuousSearchService:
                 "jit": self._jit,
                 "donate": self.donate,
                 "keep_checkpoints": self.keep_checkpoints,
+                "enable_sharing": self.forest is not None,
             },
             "queries": {
                 str(qid): {
@@ -481,9 +595,13 @@ class ContinuousSearchService:
                         list(seq) for seq in plan_decomposition(g.template)
                     ],
                     "qids": list(g.qids),
+                    "prefix_pid": (None if g.prefix is None
+                                   else g.prefix.pid),
                 }
                 for g in self._iter_groups()
             ],
+            "forest": (None if self.forest is None
+                       else self.forest.to_manifest()),
             "counters": {
                 "n_edges_ingested": int(self.n_edges_ingested),
                 "n_ticks": int(self.n_ticks),
@@ -507,6 +625,9 @@ class ContinuousSearchService:
             step = max(self.n_ticks, self._ckpt_step + 1)
         self._ckpt_step = max(self._ckpt_step, step)
         tree = {str(g.gid): g.sstate for g in self._iter_groups()}
+        if self.forest is not None:
+            tree.update({f"prefix{n.pid}": n.state
+                         for n in self.forest.nodes()})
         return self.ckpt.save(step, tree,
                               extra={"service": self._manifest()},
                               keep_last=self.keep_checkpoints)
@@ -567,25 +688,50 @@ class ContinuousSearchService:
                 int(qid_s), QueryGraph.from_spec(ent["query"]),
                 int(ent["window"]),
                 decomposition=ent.get("decomposition"))
+        by_pid = {}
+        if svc.forest is not None and man.get("forest"):
+            by_pid = svc.forest.restore_nodes(man["forest"])
         like = {}
         for gspec in man["groups"]:
             template = svc.registry.compile(
                 QueryGraph.from_spec(gspec["template_query"]),
                 int(gspec["template_window"]),
                 decomposition=gspec.get("template_decomposition"))
-            g = svc._new_group(template)
+            pid = gspec.get("prefix_pid")
+            leaf = None if pid is None else by_pid[int(pid)]
+            g = svc._new_group(template, leaf)
             g.gid = int(gspec["gid"])
             g.qids = [None if q is None else int(q) for q in gspec["qids"]]
-            svc._groups.setdefault(plan_signature(template), []).append(g)
+            gkey = (plan_signature(template),
+                    None if leaf is None else leaf.pid)
+            svc._groups.setdefault(gkey, []).append(g)
             for k, qid in enumerate(g.qids):
                 if qid is not None:
                     svc._location[qid] = (g, k)
+                    if leaf is not None:
+                        # one chain of references per restored tenant —
+                        # refcounts are rebuilt, not trusted blindly
+                        svc._prefix_of[qid] = svc.forest.adopt(leaf)
             like[str(g.gid)] = g.sstate
+        if svc.forest is not None and man.get("forest"):
+            want = {int(e["pid"]): int(e["refcount"])
+                    for e in man["forest"]["nodes"]}
+            got = {n.pid: n.refcount for n in svc.forest.nodes()}
+            if want != got:
+                raise CheckpointError(
+                    f"step {step}: forest refcounts disagree with the "
+                    f"manifest (manifest {want}, rebuilt {got})")
+            for n in svc.forest.nodes():
+                like[f"prefix{n.pid}"] = n.state
         svc._next_gid = 1 + max(
             (g["gid"] for g in man["groups"]), default=-1)
         restored = restore_checkpoint(ckpt_dir, step, like)
         for g in svc._iter_groups():
             g.sstate = jax.tree.map(jnp.asarray, restored[str(g.gid)])
+        if svc.forest is not None:
+            for n in svc.forest.nodes():
+                n.state = jax.tree.map(jnp.asarray,
+                                       restored[f"prefix{n.pid}"])
         counters = man["counters"]
         svc.n_edges_ingested = int(counters["n_edges_ingested"])
         svc.n_ticks = int(counters["n_ticks"])
@@ -596,13 +742,45 @@ class ContinuousSearchService:
 
     # ------------------------------------------------------------------ #
     def state(self, qid: int) -> EngineState:
-        """This query's (unstacked) engine state."""
+        """This query's (unstacked) engine state (under prefix sharing:
+        the suffix levels only — the shared prefix lives in the forest)."""
         group, k = self._location[qid]
         return read_slot(group.sstate, k)
 
     def matches(self, qid: int):
         """All complete matches currently in the query's window."""
-        return current_matches(self.registry.get(qid).plan, self.state(qid))
+        group, _ = self._location[qid]
+        plan = self.registry.get(qid).plan
+        if group.prefix is None:
+            return current_matches(plan, self.state(qid))
+        return shared_current_matches(plan, group.prefix, self.forest,
+                                      self.state(qid))
 
     def stats(self, qid: int):
         return self.state(qid).stats
+
+    # ------------------------------------------------------------------ #
+    # prefix-sharing observability
+    # ------------------------------------------------------------------ #
+    def shared_prefix(self, qid: int) -> SharedPrefixInfo | None:
+        """Sharing stats for one tenant, or None when the service runs
+        unshared (``enable_sharing=False``)."""
+        leaf = self._prefix_of.get(qid)
+        if leaf is None:
+            return None
+        return SharedPrefixInfo(depth=leaf.depth, n_tenants=leaf.refcount,
+                                epoch=leaf.epoch)
+
+    def forest_stats(self):
+        """Aggregate ``ForestStats`` of the shared-prefix forest (None
+        when sharing is disabled)."""
+        return None if self.forest is None else self.forest.stats()
+
+    def tenant_overflow(self, qid: int) -> int:
+        """Cumulative dropped appends affecting this tenant: its own
+        suffix/L0 tables plus (under sharing) its prefix chain."""
+        total = int(np.asarray(self.stats(qid).n_overflow))
+        leaf = self._prefix_of.get(qid)
+        if leaf is not None:
+            total += self.forest.chain_overflow(leaf)
+        return total

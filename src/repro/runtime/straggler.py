@@ -15,7 +15,10 @@ property-tested (tests/test_straggler_props.py).  The serving loop
 barrier latency — slot groups dispatch asynchronously and meet at one
 barrier, so the slowest group inherently sets the pace — with
 ``quantize_pow2`` bounding how many distinct padded batch shapes (and
-therefore jit specializations) the adaptive sizes can produce.
+therefore jit specializations) the adaptive sizes can produce.  It also
+feeds the tick's engine overflow count (``ServeInfo.n_overflow``): a
+tick that dropped appends gets the batch halved regardless of latency,
+closing the capacity-backpressure loop at the serve-loop level.
 """
 
 from __future__ import annotations
@@ -65,11 +68,23 @@ class TickCoalescer:
         return cls(batch=batch, min_batch=min_batch, max_batch=max_batch,
                    target_latency_ms=target_latency_ms)
 
-    def record(self, tick_latency_ms: float, queue_depth: int) -> int:
-        """Report the last tick; returns the batch size for the next one."""
+    def record(self, tick_latency_ms: float, queue_depth: int,
+               n_overflow: int = 0) -> int:
+        """Report the last tick; returns the batch size for the next one.
+
+        ``n_overflow`` is the tick's dropped-append count (``ServeInfo.
+        n_overflow``): a non-zero value means the chunk produced more
+        candidate partial matches than the fixed tables could absorb, so
+        the controller halves the batch immediately — a capacity signal
+        stronger than the latency AD step, and one that fires even when
+        the tick is FAST (small tables overflow quickly and cheaply).
+        Latency-based MI never overrides it within the same tick.
+        """
         a = 0.3
         self._ema_latency = (1 - a) * self._ema_latency + a * tick_latency_ms
-        if queue_depth > 2 * self.batch and \
+        if n_overflow > 0:
+            self.batch = max(self.min_batch, self.batch // 2)  # capacity MD
+        elif queue_depth > 2 * self.batch and \
                 self._ema_latency < self.target_latency_ms:
             self.batch = min(self.max_batch, self.batch * 2)   # MI
         elif self._ema_latency > self.target_latency_ms:

@@ -168,7 +168,8 @@ def test_service_same_structure_does_not_recompile():
         svc.register(chain_query(), window=20)
     assert svc.n_compiles == tc.n_builds == 2
     assert svc.n_active == 7
-    assert len(svc._groups[svc.registry.get(qa).signature]) == 2
+    # group key gained a prefix dimension (sharing off -> None)
+    assert len(svc._groups[(svc.registry.get(qa).signature, None)]) == 2
 
     # slots are reusable after unregister, again without compiling
     svc.unregister(qb)
@@ -187,7 +188,7 @@ def test_service_idle_group_retention():
     tc = SlotTickCache()
     svc = ContinuousSearchService(slots_per_group=1, tick_cache=tc, **CAP)
     a = svc.register(chain_query(), window=20)
-    sig = svc.registry.get(a).signature
+    sig = (svc.registry.get(a).signature, None)   # key: sig x prefix
     b = svc.register(chain_query(), window=20)   # same sig, second group
     assert svc.n_compiles == tc.n_builds == 1    # one build serves both
     assert len(svc._groups[sig]) == 2

@@ -1,0 +1,59 @@
+"""Deterministic tests for the coalescer's overflow throttle.
+
+Separate from tests/test_straggler_props.py on purpose: that module is
+gated on the optional ``hypothesis`` dependency, and none of these need
+it — a regression in the capacity-MD path must fail even in
+environments without dev extras.  (The hypothesis module holds the
+randomized bound/monotonicity properties for the same path.)
+"""
+
+from repro.core.query import QueryGraph
+from repro.runtime.service import ContinuousSearchService
+from repro.runtime.straggler import TickCoalescer
+
+from test_engine_oracle import small_stream
+
+
+def test_overflow_halves_batch_immediately():
+    c = TickCoalescer(batch=256)
+    assert c.record(1.0, 10**9, n_overflow=5) == 128   # despite MI headroom
+    assert c.record(1.0, 10**9, n_overflow=5) == 64
+
+
+def test_sustained_overflow_reaches_min_batch():
+    c = TickCoalescer()            # fast ticks, deep queue: would grow
+    for _ in range(20):
+        b = c.record(1.0, queue_depth=10**9, n_overflow=5)
+    assert b == c.min_batch
+
+
+def test_overflow_clears_then_recovers():
+    """After the overflow pressure clears, MI growth resumes."""
+    c = TickCoalescer()
+    c.record(1.0, queue_depth=10**9, n_overflow=1)
+    shrunk = c.batch
+    for _ in range(10):
+        b = c.record(1.0, queue_depth=10**9, n_overflow=0)
+    assert b > shrunk
+
+
+def test_serve_stream_throttles_chunks_on_engine_overflow():
+    """End-to-end: a service whose tiny tables overflow must shrink the
+    served chunk sizes (ServeInfo.n_overflow feeds the coalescer), not
+    keep hammering full-size ticks into saturated tables."""
+    svc = ContinuousSearchService(
+        slots_per_group=2, level_capacity=16, l0_capacity=16, max_new=4)
+    svc.register(QueryGraph(3, (0, 0, 0), ((0, 1), (1, 2)),
+                            prec=frozenset({(0, 1)})), 60)
+    stream = small_stream(512, n_vertices=6, n_vertex_labels=1, seed=3)
+    infos = []
+    svc.serve_stream(stream, on_tick=infos.append, batch_size=64,
+                     min_batch=8, max_batch=64)
+    overflowed = [i for i, inf in enumerate(infos) if inf.n_overflow > 0]
+    assert overflowed, "stream failed to saturate the tiny tables"
+    first = overflowed[0]
+    assert first + 1 < len(infos)
+    # the very next tick is at most half the overflowing one (modulo the
+    # stream tail), and the loop reaches the floor under sustained load
+    assert infos[first + 1].chunk <= max(8, infos[first].chunk // 2)
+    assert min(inf.chunk for inf in infos[first:]) == 8

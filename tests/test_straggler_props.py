@@ -90,6 +90,39 @@ def test_invalid_bounds_rejected():
         TickCoalescer(min_batch=64, max_batch=32)
 
 
+# --------------------------------------------------------------------- #
+# overflow throttling (ServeInfo.n_overflow -> capacity MD)
+# --------------------------------------------------------------------- #
+@settings(max_examples=200, deadline=None)
+@given(batch=st.integers(32, 4096), ema=latencies, lat=latencies,
+       depth=depths, n_overflow=st.integers(1, 10**6))
+def test_overflow_always_shrinks(batch, ema, lat, depth, n_overflow):
+    """A tick that dropped appends must never grow the batch — the
+    capacity signal halves it regardless of latency headroom or queue
+    depth (fast ticks overflow small tables cheaply)."""
+    c = TickCoalescer(batch=batch, _ema_latency=ema)
+    before = c.batch
+    after = c.record(lat, depth, n_overflow)
+    assert after == max(c.min_batch, before // 2)
+    assert c.min_batch <= after <= c.max_batch
+
+
+@settings(max_examples=100, deadline=None)
+@given(trace=st.lists(st.tuples(latencies, depths,
+                                st.integers(0, 100)), min_size=1,
+                      max_size=200))
+def test_batch_bounded_with_overflow(trace):
+    c = TickCoalescer()
+    for lat, depth, n_overflow in trace:
+        b = c.record(lat, depth, n_overflow)
+        assert c.min_batch <= b <= c.max_batch
+
+
+# Deterministic overflow-throttle tests (incl. the serve_stream
+# integration) live in tests/test_straggler_overflow.py: they need no
+# hypothesis and must not skip with it.
+
+
 @settings(max_examples=300, deadline=None)
 @given(n=st.integers(1, 1 << 20), lo=st.sampled_from([1, 8, 16]))
 def test_quantize_pow2(n, lo):
