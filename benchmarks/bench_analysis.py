@@ -1,0 +1,57 @@
+"""Analyzer coverage trajectory: ``BENCH_analysis.json``.
+
+Unlike the other BENCH files this does not time a hot path — it records
+the *coverage* of the static-analysis gate (``repro.analysis``) so
+per-PR deltas are machine-trackable: how many files and pallas_call
+sites the passes see, how many plans the corpus sweep verifies, and the
+post-baseline findings count per severity.  A PR that adds a kernel
+without a contract, or regresses the tree to a non-empty error count,
+shows up here even before the CI lint job fails.
+
+Output: ``BENCH_analysis.json`` at the repo root (schema
+``bench_analysis/v1``).  ``--dry`` / ``dry=True`` runs the reduced
+kernel lattice — same schema, CI smoke gate.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.analysis.cli import _default_paths, run_passes
+from repro.analysis.findings import load_baseline
+
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_analysis.json")
+
+
+def bench_analysis_json(reduced: bool = True, dry: bool = False) -> dict:
+    root, baseline_path = _default_paths()
+    t0 = time.time()
+    report = run_passes(root, fast=dry or reduced)
+    report = report.split_by_baseline(load_baseline(baseline_path))
+    wall_s = time.time() - t0
+
+    doc = {
+        "schema": "bench_analysis/v1",
+        "platform": jax.default_backend(),
+        "dry": bool(dry),
+        "wall_s": round(wall_s, 3),
+        "stats": dict(report.stats),
+        "findings_by_severity": report.by_severity(),
+        "n_suppressed": len(report.suppressed),
+    }
+    with open(JSON_PATH, "w") as fh:
+        json.dump(doc, fh, indent=1)
+        fh.write("\n")
+    print(f"# BENCH_analysis.json: {report.stats} "
+          f"{doc['findings_by_severity']} in {wall_s:.1f}s")
+    return doc
+
+
+if __name__ == "__main__":
+    bench_analysis_json(dry=True)

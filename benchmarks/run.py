@@ -7,14 +7,16 @@ machine-readable trajectories go to the repo root: ``BENCH_join.json``
 compat_join_pairs vs mask+nonzero bytes model — see
 ``benchmarks.bench_kernels.bench_join_json``), ``BENCH_tick.json``
 (engine-level: end-to-end ``serve_stream`` tick cost per backend through
-the ``repro.api`` session — see ``benchmarks.bench_service``) and
+the ``repro.api`` session — see ``benchmarks.bench_service``),
 ``BENCH_share.json`` (cross-tenant prefix sharing: shared vs unshared
 tick cost and table bytes at N tenants × overlap fraction — see
-``benchmarks.bench_share``).
+``benchmarks.bench_share``) and ``BENCH_analysis.json`` (static-analysis
+coverage: files / pallas sites / plans verified and post-baseline
+findings per severity — see ``benchmarks.bench_analysis``).
 
 ``--dry`` is the CI smoke mode: tiny shapes, only the join + tick +
-share benches, but the same JSON schemas, so the emission paths can't
-rot.
+share + analysis benches, but the same JSON schemas, so the emission
+paths can't rot.
 
 The roofline/dry-run tables (EXPERIMENTS.md §Dry-run/§Roofline) are
 produced separately by ``python -m repro.launch.dryrun --all`` and
@@ -27,6 +29,7 @@ import argparse
 import time
 
 from benchmarks import (
+    bench_analysis,
     bench_engine,
     bench_kernels,
     bench_multiquery,
@@ -50,6 +53,7 @@ def main() -> None:
         bench_kernels.bench_join_json(reduced=True, dry=True)
         bench_service.bench_tick_json(reduced=True, dry=True)
         bench_share.bench_share_json(reduced=True, dry=True)
+        bench_analysis.bench_analysis_json(reduced=True, dry=True)
         print(f"# total bench wall time: {time.time() - t0:.1f}s")
         return
 
@@ -64,6 +68,7 @@ def main() -> None:
     bench_kernels.bench_join_json(reduced=reduced)    # BENCH_join.json
     bench_service.bench_tick_json(reduced=reduced)    # BENCH_tick.json
     bench_share.bench_share_json(reduced=reduced)     # BENCH_share.json
+    bench_analysis.bench_analysis_json(reduced=reduced)  # BENCH_analysis.json
     bench_multiquery.main(                            # multi-tenant serving
         n_queries=6 if reduced else 12,
         n_edges=3000 if reduced else 20000)

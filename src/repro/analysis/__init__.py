@@ -1,0 +1,22 @@
+"""Static analysis gate for the serving stack (``python -m repro.analysis``).
+
+Three passes, one findings currency:
+
+* ``ast_lint``     — tracing-hazard linter over jit-/pallas-reachable code;
+* ``kernel_check`` — Pallas BlockSpec/tile/SMEM contracts proven over the
+  reachable shape lattice, plus kernel-vs-ref abstract evaluation;
+* ``plan_check``   — the paper's decomposition invariants, also enforced
+  at ``QueryRegistry.register`` time via ``verify_plan``.
+"""
+
+from repro.analysis.findings import (
+    ERROR, INFO, SEVERITIES, WARNING, Baseline, Finding, Report,
+    load_baseline)
+from repro.analysis.plan_check import (
+    PlanInvariantError, check_plan, verify_corpus, verify_plan)
+
+__all__ = [
+    "ERROR", "INFO", "WARNING", "SEVERITIES",
+    "Baseline", "Finding", "Report", "load_baseline",
+    "PlanInvariantError", "check_plan", "verify_plan", "verify_corpus",
+]

@@ -1,0 +1,457 @@
+"""Kernel contract checker: static proofs over every ``pallas_call``.
+
+ROADMAP item 5 (running the SMEM-cursor pair kernel on real TPUs) should
+start from machine-checked contracts, not interpret-parity hope.  This
+pass proves, for every kernel entry point in ``kernels/*/kernel.py`` and
+over the *reachable shape lattice* — pow-2 capacities (the serving stack
+quantizes every table axis with ``runtime.straggler.quantize_pow2``,
+floor 8) × all ``choose_tiles`` outputs × slot-stack depths:
+
+KC101  tile divisibility: the padded capacity each op wrapper feeds the
+       kernel is an exact tile multiple and every grid extent is ≥ 1;
+KC102  tile alignment: TA is a sublane (8) multiple and TB a lane (128)
+       multiple — the int32 VREG granularity from the Pallas TPU guide;
+KC103  index-map bounds: each BlockSpec's ``index_map`` (mirrored here,
+       declaratively, from the kernel source) stays in bounds for every
+       grid point — ``index*block + block <= padded array dim`` on every
+       axis, including the data-dependent embedding-bag maps, which are
+       proven by interval argument from their documented preconditions;
+KC104  SMEM cursor safety for ``compat_join_pairs``: the emit clamp
+       ``n_emit = min(n_tile, max(max_new - base, 0))`` implies every
+       write lands strictly below ``max_new`` for any base in
+       [0, CA·CB] and any per-tile count in [0, TA·TB] — checked
+       algebraically at the interval extremes, after asserting the
+       clamp expression is actually present in the kernel source;
+KC105  kernel-vs-ref agreement: ``jax.eval_shape`` abstract evaluation
+       of the public ops against the pure-jnp ``ref.py`` oracles (and
+       their vmapped forms against the stacked 3-D-grid kernels) —
+       identical output trees, shapes and dtypes, with zero FLOPs run.
+
+KC100 (warning) flags any ``pallas_call`` site in a kernels package that
+has no declarative contract here — new kernels must register one.
+
+``jax.eval_shape`` does trace the kernel bodies (on CPU, no lowering,
+no execution), so KC105 also catches rank/dtype bugs *inside* kernel
+bodies, not just in the wrappers.
+"""
+
+from __future__ import annotations
+
+import ast
+import itertools
+import os
+
+import numpy as np
+
+from repro.analysis.findings import ERROR, WARNING, Finding
+
+# Entry points with a declarative contract below.  KC100 fires for any
+# pallas_call in kernels/*/kernel.py outside these functions.
+MODELED_ENTRY_POINTS = frozenset({
+    "compat_mask_kernel", "compat_mask_kernel_batched",
+    "compat_join_pairs_kernel", "compat_join_pairs_kernel_batched",
+    "segment_sum_kernel", "embedding_bag_kernel",
+})
+
+# Reachable shape lattice.  Capacities are pow-2 (quantize_pow2, lo=8);
+# slot-stack depths come from plan_signature grouping in core.multi.
+CAPS_FULL = tuple(2 ** k for k in range(3, 13))          # 8 .. 4096
+CAPS_FAST = (8, 64, 256, 4096)
+SLOTS = (1, 2, 4, 8)
+MAX_NEW = (64, 256, 1024, 4096)
+WIDTHS = (1, 2, 3, 4)                                    # nv / ne columns
+
+# Representative batched-flag sets for the stacked kernels: all-shared,
+# all-per-slot, and each one-sided mix (the slot tick's stream-edge
+# operand is the canonical shared side).
+FLAG_SETS = (
+    (False,) * 6,
+    (True,) * 6,
+    (True, True, True, False, False, False),
+    (False, False, False, True, True, True),
+)
+
+
+def _finding(rule, severity, symbol, message, path="", line=0):
+    return Finding(pass_name="kernel", rule=rule, severity=severity,
+                   path=path, line=line, symbol=symbol, message=message)
+
+
+# --------------------------------------------------------------------- #
+# pallas_call site discovery (KC100 + n_pallas_sites)
+# --------------------------------------------------------------------- #
+def discover_pallas_sites(kernels_root: str) -> list[tuple[str, str, int]]:
+    """All ``pallas_call`` sites in kernels/*/kernel.py as
+    (repo-relative path, enclosing function name, line)."""
+    sites = []
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(
+        os.path.join(kernels_root, os.pardir))))
+    for dirpath, _d, files in sorted(os.walk(kernels_root)):
+        for fn in sorted(files):
+            if fn != "kernel.py":
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path) as fh:
+                tree = ast.parse(fh.read(), filename=path)
+            rel = os.path.relpath(path, repo_root)
+            func_stack: list[str] = []
+
+            def visit(node):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    func_stack.append(node.name)
+                    for c in ast.iter_child_nodes(node):
+                        visit(c)
+                    func_stack.pop()
+                    return
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "pallas_call"):
+                    sites.append((rel, func_stack[-1] if func_stack
+                                  else "<module>", node.lineno))
+                for c in ast.iter_child_nodes(node):
+                    visit(c)
+
+            visit(tree)
+    return sites
+
+
+# --------------------------------------------------------------------- #
+# Declarative BlockSpec contracts (mirrored from kernel.py)
+# --------------------------------------------------------------------- #
+def _bounds_ok(grid, specs):
+    """Exhaustively check index*block + block <= dim for every grid
+    point.  ``specs`` is [(name, array_shape, block_shape, index_map)]
+    with index_map taking the grid tuple and returning block indices."""
+    bad = []
+    for point in itertools.product(*(range(g) for g in grid)):
+        for name, array_shape, block_shape, index_map in specs:
+            idx = index_map(*point)
+            for ax, (i, b, dim) in enumerate(
+                    zip(idx, block_shape, array_shape)):
+                if i < 0 or i * b + b > dim:
+                    bad.append((name, point, ax, i, b, dim))
+    return bad
+
+
+def _compat_specs(cap, cbp, ta, tb, widths, max_new=None):
+    """Unbatched 2-D-grid specs, mirroring compat_*_kernel."""
+    nva, nea, nvb, neb = widths
+    specs = [
+        ("bind_a", (cap, nva), (ta, nva), lambda i, j: (i, 0)),
+        ("ets_a", (cap, nea), (ta, nea), lambda i, j: (i, 0)),
+        ("valid_a", (cap,), (ta,), lambda i, j: (i,)),
+        ("bind_b", (cbp, nvb), (tb, nvb), lambda i, j: (j, 0)),
+        ("ets_b", (cbp, neb), (tb, neb), lambda i, j: (j, 0)),
+        ("valid_b", (cbp,), (tb,), lambda i, j: (j,)),
+    ]
+    if max_new is None:
+        specs.append(("mask_out", (cap, cbp), (ta, tb),
+                      lambda i, j: (i, j)))
+    else:
+        specs += [
+            ("a_out", (max_new,), (max_new,), lambda i, j: (0,)),
+            ("b_out", (max_new,), (max_new,), lambda i, j: (0,)),
+            ("n_out", (1,), (1,), lambda i, j: (0,)),
+        ]
+    return specs
+
+
+def _compat_specs_batched(n_slots, cap, cbp, ta, tb, widths, flags,
+                          max_new=None):
+    """Stacked 3-D-grid specs, mirroring _stacked_in_specs: batched
+    inputs carry [S] and a slot-aware index_map; shared inputs keep the
+    2-D map that ignores the slot coordinate."""
+    nva, nea, nvb, neb = widths
+    base = [
+        ("bind_a", (cap, nva), (ta, nva), lambda s, i, j: (i, 0)),
+        ("ets_a", (cap, nea), (ta, nea), lambda s, i, j: (i, 0)),
+        ("valid_a", (cap,), (ta,), lambda s, i, j: (i,)),
+        ("bind_b", (cbp, nvb), (tb, nvb), lambda s, i, j: (j, 0)),
+        ("ets_b", (cbp, neb), (tb, neb), lambda s, i, j: (j, 0)),
+        ("valid_b", (cbp,), (tb,), lambda s, i, j: (j,)),
+    ]
+    specs = []
+    for flag, (name, shape, block, idx) in zip(flags, base):
+        if flag:
+            specs.append((name, (n_slots,) + shape, (1,) + block,
+                          lambda s, i, j, idx=idx: (s,) + idx(s, i, j)))
+        else:
+            specs.append((name, shape, block, idx))
+    if max_new is None:
+        specs.append(("mask_out", (n_slots, cap, cbp), (1, ta, tb),
+                      lambda s, i, j: (s, i, j)))
+    else:
+        specs += [
+            ("a_out", (n_slots, max_new), (1, max_new),
+             lambda s, i, j: (s, 0)),
+            ("b_out", (n_slots, max_new), (1, max_new),
+             lambda s, i, j: (s, 0)),
+            ("n_out", (n_slots, 1), (1, 1), lambda s, i, j: (s, 0)),
+        ]
+    return specs
+
+
+def check_tiles_and_bounds(fast: bool = False) -> list[Finding]:
+    """KC101/KC102/KC103 over the reachable lattice for the compat
+    kernels, plus the fixed-tile segment_reduce / embedding_bag grids."""
+    from repro.kernels.compat_join.kernel import (
+        _LANE, _SUBLANE, _ceil_to, choose_tiles)
+
+    findings: list[Finding] = []
+    caps = CAPS_FAST if fast else CAPS_FULL
+
+    # --- compat_join: full choose_tiles lattice ---
+    for ca, cb in itertools.product(caps, caps):
+        ta, tb = choose_tiles(ca, cb)
+        cap, cbp = _ceil_to(ca, ta), _ceil_to(cb, tb)
+        sym = f"choose_tiles({ca},{cb})"
+        if ta % _SUBLANE or tb % _LANE:
+            findings.append(_finding(
+                "KC102", ERROR, sym,
+                f"tile ({ta},{tb}) not ({_SUBLANE},{_LANE})-aligned"))
+        if cap % ta or cbp % tb or cap // ta < 1 or cbp // tb < 1:
+            findings.append(_finding(
+                "KC101", ERROR, sym,
+                f"padded caps ({cap},{cbp}) not exact multiples of "
+                f"tiles ({ta},{tb}) or empty grid"))
+            continue
+        widths = (2, 1, 1, 1)
+        grid = (cap // ta, cbp // tb)
+        bad = _bounds_ok(grid, _compat_specs(cap, cbp, ta, tb, widths))
+        bad += _bounds_ok(grid, _compat_specs(cap, cbp, ta, tb, widths,
+                                              max_new=MAX_NEW[0]))
+        for n_slots, flags in itertools.product(
+                SLOTS if not fast else SLOTS[:2],
+                FLAG_SETS if not fast else FLAG_SETS[:2]):
+            g3 = (n_slots,) + grid
+            bad += _bounds_ok(g3, _compat_specs_batched(
+                n_slots, cap, cbp, ta, tb, widths, flags))
+            bad += _bounds_ok(g3, _compat_specs_batched(
+                n_slots, cap, cbp, ta, tb, widths, flags,
+                max_new=MAX_NEW[0]))
+        for name, point, ax, i, b, dim in bad[:3]:
+            findings.append(_finding(
+                "KC103", ERROR, sym,
+                f"index_map of {name} out of bounds at grid {point}: "
+                f"axis {ax} block {i}*{b}+{b} > {dim}"))
+
+    # --- segment_reduce: fixed 512/256 tiles, padded-multiple contract ---
+    from repro.kernels.segment_reduce.kernel import TILE_E, TILE_N
+    seg_lat = [(TILE_E * a, TILE_N * b, d)
+               for a in (1, 4) for b in (1, 4) for d in (8, 128)]
+    for e, n, d in seg_lat:
+        grid = (n // TILE_N, e // TILE_E)
+        sym = f"segment_sum_kernel(E={e},N={n},D={d})"
+        if e % TILE_E or n % TILE_N or grid[0] < 1 or grid[1] < 1:
+            findings.append(_finding(
+                "KC101", ERROR, sym, "padded-multiple precondition "
+                "violated inside the checker's own lattice"))
+            continue
+        specs = [
+            ("dst", (e,), (TILE_E,), lambda i, j: (j,)),
+            ("msg", (e, d), (TILE_E, d), lambda i, j: (j, 0)),
+            ("out", (n, d), (TILE_N, d), lambda i, j: (i, 0)),
+        ]
+        for name, point, ax, i, b, dim in _bounds_ok(grid, specs)[:3]:
+            findings.append(_finding(
+                "KC103", ERROR, sym,
+                f"index_map of {name} out of bounds at grid {point}"))
+
+    # --- embedding_bag: data-dependent maps, interval proof ---
+    # Preconditions (documented in kernel.py): ids in [-1, V-1] with the
+    # map clamping to max(ids[i], 0); bags in [0, n_bags-1].
+    for v, n_bags, d in ((16, 4, 8), (4096, 512, 64)):
+        sym = f"embedding_bag_kernel(V={v},B={n_bags},D={d})"
+        lo, hi = max(-1, 0), v - 1          # after clamp: [0, V-1]
+        if not (0 <= lo and hi * 1 + 1 <= v):
+            findings.append(_finding(
+                "KC103", ERROR, sym,
+                "clamped table index interval exceeds [0, V)"))
+        if not (0 <= 0 and (n_bags - 1) * 1 + 1 <= n_bags):
+            findings.append(_finding(
+                "KC103", ERROR, sym,
+                "bag output index interval exceeds [0, n_bags)"))
+    return findings
+
+
+# --------------------------------------------------------------------- #
+# KC104: SMEM cursor interval proof
+# --------------------------------------------------------------------- #
+_CLAMP_EXPR = "jnp.minimum(n_tile, jnp.maximum(max_new - base, 0))"
+
+
+def check_smem_cursor(fast: bool = False) -> list[Finding]:
+    """Prove the pairs kernels' emit loop never writes at or beyond
+    ``max_new``, for any cursor value the grid can produce."""
+    import repro.kernels.compat_join.kernel as K
+    findings: list[Finding] = []
+
+    src = open(K.__file__).read()
+    if _CLAMP_EXPR not in src:
+        findings.append(_finding(
+            "KC104", ERROR, "compat_join_pairs._pairs_body",
+            f"emit clamp `{_CLAMP_EXPR}` not found in kernel source — "
+            f"the SMEM cursor bound proof no longer applies"))
+        return findings
+
+    caps = CAPS_FAST if fast else CAPS_FULL
+    for ca, cb in itertools.product(caps, caps):
+        ta, tb = K.choose_tiles(ca, cb)
+        cap, cbp = K._ceil_to(ca, ta), K._ceil_to(cb, tb)
+        n_tile_max = ta * tb
+        for max_new in MAX_NEW:
+            # cursor extremes: 0, around the clamp knee, and the
+            # absolute maximum (every pair of every tile matched)
+            bases = {0, max(0, max_new - 1), max_new, max_new + 1,
+                     cap * cbp}
+            for base in bases:
+                for n_tile in (0, 1, n_tile_max):
+                    n_emit = min(n_tile, max(max_new - base, 0))
+                    if n_emit > 0 and base + n_emit - 1 >= max_new:
+                        findings.append(_finding(
+                            "KC104", ERROR,
+                            f"compat_join_pairs(ca={ca},cb={cb},"
+                            f"max_new={max_new})",
+                            f"cursor write base={base} k={n_emit - 1} "
+                            f"reaches index {base + n_emit - 1} >= "
+                            f"max_new={max_new}"))
+    return findings
+
+
+# --------------------------------------------------------------------- #
+# KC105: kernel-vs-ref abstract evaluation agreement
+# --------------------------------------------------------------------- #
+def _tree_sig(tree):
+    import jax
+    return jax.tree.map(lambda x: (tuple(x.shape), str(x.dtype)), tree)
+
+
+def check_kernel_ref_agreement(fast: bool = False) -> list[Finding]:
+    """``jax.eval_shape`` the public ops against their ref oracles."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.compat_join import ops as cj_ops
+    from repro.kernels.compat_join import ref as cj_ref
+    from repro.kernels.embedding_bag import kernel as eb_k
+    from repro.kernels.embedding_bag import ref as eb_ref
+    from repro.kernels.segment_reduce import kernel as sr_k
+    from repro.kernels.segment_reduce import ref as sr_ref
+
+    findings: list[Finding] = []
+    S = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+
+    def compare(sym, fk, fr, *args):
+        try:
+            got = _tree_sig(jax.eval_shape(fk, *args))
+        except Exception as exc:                       # trace failure
+            findings.append(_finding(
+                "KC105", ERROR, sym,
+                f"kernel path failed abstract evaluation: {exc!r}"))
+            return
+        want = _tree_sig(jax.eval_shape(fr, *args))
+        if got != want:
+            findings.append(_finding(
+                "KC105", ERROR, sym,
+                f"kernel/ref signature mismatch: {got} != {want}"))
+
+    # compat_join: include a non-pow-2 point to exercise the padding path
+    points = [(8, 8), (64, 128), (100, 37)]
+    if not fast:
+        points += [(256, 256), (1024, 512)]
+    nva, nea, nvb, neb = 2, 2, 1, 1
+    rel = np.zeros((nva, nvb), bool)
+    rel[0, 0] = True
+    trel = np.zeros((nea, neb), np.int8)
+    trel[-1, 0] = -1
+    for ca, cb in points:
+        # valid is bool by contract (core.join.compat_mask_ref signature)
+        a = (S((ca, nva), i32), S((ca, nea), i32), S((ca,), jnp.bool_))
+        b = (S((cb, nvb), i32), S((cb, neb), i32), S((cb,), jnp.bool_))
+        sym = f"compat_mask(ca={ca},cb={cb})"
+        compare(sym,
+                lambda *t: cj_ops.compat_mask(*t, rel, trel, window=30),
+                lambda *t: cj_ref.compat_mask(*t, rel, trel, window=30),
+                *a, *b)
+        sym = f"compat_join_pairs(ca={ca},cb={cb})"
+        compare(sym,
+                lambda *t: cj_ops.compat_join_pairs(
+                    *t, rel, trel, 256, window=30),
+                lambda *t: cj_ref.compat_join_pairs(
+                    *t, rel, trel, 256, window=30),
+                *a, *b)
+
+    # vmapped -> stacked 3-D-grid kernel (per-slot windows)
+    for n_slots in (SLOTS[:2] if fast else SLOTS):
+        ca, cb = 64, 128
+        a = (S((n_slots, ca, nva), i32), S((n_slots, ca, nea), i32),
+             S((n_slots, ca), jnp.bool_))
+        b = (S((n_slots, cb, nvb), i32), S((n_slots, cb, neb), i32),
+             S((n_slots, cb), jnp.bool_))
+        w = S((n_slots,), i32)
+
+        def k_mask(ba, ea, va, bb, eb, vb, win):
+            return cj_ops.compat_mask(ba, ea, va, bb, eb, vb, rel, trel,
+                                      window=win)
+
+        def r_mask(ba, ea, va, bb, eb, vb, win):
+            return cj_ref.compat_mask(ba, ea, va, bb, eb, vb, rel, trel,
+                                      window=win)
+
+        def k_pairs(ba, ea, va, bb, eb, vb, win):
+            return cj_ops.compat_join_pairs(
+                ba, ea, va, bb, eb, vb, rel, trel, 256, window=win)
+
+        def r_pairs(ba, ea, va, bb, eb, vb, win):
+            return cj_ref.compat_join_pairs(
+                ba, ea, va, bb, eb, vb, rel, trel, 256, window=win)
+
+        compare(f"vmap(compat_mask)(S={n_slots})",
+                jax.vmap(k_mask), jax.vmap(r_mask), *a, *b, w)
+        compare(f"vmap(compat_join_pairs)(S={n_slots})",
+                jax.vmap(k_pairs), jax.vmap(r_pairs), *a, *b, w)
+
+    # segment_reduce
+    e, n, d = (512, 256, 8) if fast else (2048, 1024, 64)
+    compare(f"segment_sum(E={e},N={n},D={d})",
+            lambda dst, msg: sr_k.segment_sum_kernel(dst, msg, n),
+            lambda dst, msg: sr_ref.segment_sum(dst, msg, n),
+            S((e,), i32), S((e, d), jnp.float32))
+
+    # embedding_bag (kernel takes the extra `first` marker input)
+    t, v, nb, d = (16, 32, 4, 8) if fast else (128, 1024, 32, 64)
+    compare(f"embedding_bag(T={t},V={v},B={nb},D={d})",
+            lambda ids, bags, first, table: eb_k.embedding_bag_kernel(
+                ids, bags, first, table, nb),
+            lambda ids, bags, first, table: eb_ref.embedding_bag(
+                ids, bags, table, nb),
+            S((t,), i32), S((t,), i32), S((t,), i32),
+            S((v, d), jnp.float32))
+    return findings
+
+
+# --------------------------------------------------------------------- #
+# Entry point
+# --------------------------------------------------------------------- #
+def check_kernels(kernels_root: str | None = None, fast: bool = False
+                  ) -> tuple[list[Finding], dict]:
+    if kernels_root is None:
+        kernels_root = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "kernels")
+    findings: list[Finding] = []
+    sites = discover_pallas_sites(kernels_root)
+    for path, func, line in sites:
+        if func not in MODELED_ENTRY_POINTS:
+            findings.append(Finding(
+                pass_name="kernel", rule="KC100", severity=WARNING,
+                path=path, line=line, symbol=func,
+                message="pallas_call without a declarative contract in "
+                        "repro.analysis.kernel_check — register its "
+                        "BlockSpecs in MODELED_ENTRY_POINTS"))
+    findings += check_tiles_and_bounds(fast=fast)
+    findings += check_smem_cursor(fast=fast)
+    findings += check_kernel_ref_agreement(fast=fast)
+    stats = {"n_pallas_sites": len(sites)}
+    return findings, stats

@@ -35,10 +35,21 @@ class TCSubquery:
 def tc_subqueries(q: QueryGraph, max_enum: int = 200_000) -> list[TCSubquery]:
     """Algorithm 5: all TC-subqueries of ``q``.
 
-    BFS over timing sequences: a sequence ``(e_1..e_j)`` extends to
-    ``(e_1..e_j, e_x)`` iff ``e_j ≺ e_x`` and ``e_x`` is adjacent to some
-    edge already in the sequence (prefix-connectivity).  Dedups by edge
-    *set*, keeping the first witness sequence found.
+    Iterative DFS (an explicit LIFO stack — ``queue.pop()`` takes the
+    most recently pushed sequence) over timing sequences: a sequence
+    ``(e_1..e_j)`` extends to ``(e_1..e_j, e_x)`` iff ``e_j ≺ e_x`` and
+    ``e_x`` is adjacent to some edge already in the sequence
+    (prefix-connectivity).  Dedups by edge *set*, keeping the first
+    witness sequence found.
+
+    The traversal order is deterministic and LOAD-BEARING: the
+    first-witness sequence chosen for each edge set flows into
+    ``plan_signature`` (slot-group sharing) and into checkpoint
+    manifests (``plan_decomposition``), so changing the order — e.g.
+    switching to the BFS the paper's prose suggests — would silently
+    invalidate cross-process sharing and restored checkpoints.
+    ``tests/test_query.py::test_tc_subquery_enumeration_deterministic``
+    pins the exact enumeration for the paper's Figure-2 query.
     """
     seen_sets: dict[frozenset[int], tuple[int, ...]] = {}
     queue: list[tuple[int, ...]] = [(e,) for e in range(q.n_edges)]

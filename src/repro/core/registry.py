@@ -109,7 +109,14 @@ class QueryRegistry:
                  plan: ExecutionPlan | None = None) -> int:
         """Register a standing query; with ``plan`` given, serve that
         EXACT plan (custom decomposition / capacities) instead of
-        compiling one."""
+        compiling one.
+
+        Every plan — compiled here or supplied — must satisfy the
+        paper's decomposition invariants (edge-disjoint cover, valid
+        timing sequences, prefix-connected join order, coherent
+        REL/TREL and prefix-chain slices); a violating plan raises
+        ``repro.analysis.PlanInvariantError`` before any registry state
+        is touched."""
         if plan is None:
             plan = self.compile(query, window)
         elif plan.query != query or plan.window != window:
@@ -129,6 +136,10 @@ class QueryRegistry:
                     "plan capacities differ from the registry's "
                     f"(level={self.level_capacity}, l0={self.l0_capacity}, "
                     f"max_new={self.max_new})")
+        # fail-fast BEFORE qid allocation: a rejected plan must leave
+        # the registry (and the service layers above it) untouched
+        from repro.analysis.plan_check import verify_plan
+        verify_plan(plan, symbol=f"register(window={window})")
         qid = self._next_qid
         self._next_qid += 1
         self._queries[qid] = RegisteredQuery(
@@ -146,6 +157,10 @@ class QueryRegistry:
         if qid in self._queries:
             raise ValueError(f"qid {qid} already registered")
         plan = self.compile(query, window, decomposition=decomposition)
+        # restore path: a manifest carrying a corrupted decomposition
+        # must fail restore, not serve wrong-semantics matches
+        from repro.analysis.plan_check import verify_plan
+        verify_plan(plan, symbol=f"adopt(qid={qid})")
         rq = RegisteredQuery(
             qid=qid, query=query, window=window, plan=plan,
             signature=plan_signature(plan),

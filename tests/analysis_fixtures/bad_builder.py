@@ -1,0 +1,36 @@
+"""Linter fixture: builder closure + donation hazards (TRC105/TRC106).
+
+Never imported — only parsed by ``tests/test_analysis.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def build_leaky_tick(plan, window):
+    """Closes the dynamic ``window`` over the returned traced closure —
+    the exact bug class the PR-2 traced-window work fixed by hand."""
+
+    def tick(state, batch):
+        return state + jnp.minimum(batch, window)   # TRC105
+
+    return tick
+
+
+def serve(plan, window):
+    tick = build_leaky_tick(plan, window)
+    return jax.jit(tick)                            # TRC106: no donate
+
+
+def serve_donating(plan, window):
+    tick = build_leaky_tick(plan, window)
+    return jax.jit(tick, donate_argnums=(0,))       # ok
+
+
+def build_clean_tick(plan):
+    """Only the structural ``plan`` is captured: no findings."""
+
+    def tick(state, batch, window):
+        return state + jnp.minimum(batch, window)
+
+    return tick

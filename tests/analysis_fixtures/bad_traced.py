@@ -1,0 +1,59 @@
+"""Linter fixture: known-bad traced-scope patterns.
+
+Never imported — only parsed by ``tests/test_analysis.py`` to pin the
+golden findings of ``repro.analysis.ast_lint``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_cast(x):
+    return int(x) + 1                       # TRC101
+
+
+@jax.jit
+def bad_numpy(x):
+    return np.sum(x)                        # TRC102
+
+
+@jax.jit
+def bad_sync(x):
+    return x.tolist()                       # TRC103
+
+
+@jax.jit
+def bad_branch(x):
+    if x > 0:                               # TRC104
+        return x
+    return -x
+
+
+@jax.jit
+def suppressed_cast(x):
+    return int(x)  # analysis: ignore[TRC101]
+
+
+@jax.jit
+def ok_none_check(x, y=None):
+    if y is None:                           # identity test: exempt
+        return x
+    return x + y
+
+
+@jax.jit
+def ok_shape_kills_taint(x):
+    n = x.shape[0]
+    if n > 4:                               # static under jit: no finding
+        return jnp.sum(x[:4])
+    return jnp.sum(x)
+
+
+def host_helper(v):
+    # untraced host code: np/int/if are all fine here
+    arr = np.asarray(v)
+    if arr.size > 3:
+        return int(arr.sum())
+    return 0

@@ -1,0 +1,25 @@
+"""Property test (hypothesis): ``plan_check`` accepts every plan the
+planner compiles from a random connected query — the verifier must never
+reject legitimate planner output, only hand-built violations."""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)")
+from hypothesis import assume, given, settings, strategies as st
+
+from test_api_props import abstract_queries, make_query
+
+from repro.analysis import ERROR
+from repro.analysis.plan_check import verify_plan
+from repro.core.plan import compile_plan
+
+
+@settings(max_examples=80, deadline=None)
+@given(spec=abstract_queries(), window=st.integers(1, 1000))
+def test_plan_check_accepts_every_planner_plan(spec, window):
+    q = make_query(spec)
+    assume(q.is_connected())
+    plan = compile_plan(q, window)
+    findings = verify_plan(plan, raise_on_error=True)  # raises on ERROR
+    assert all(f.severity != ERROR for f in findings)

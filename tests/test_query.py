@@ -94,3 +94,20 @@ def test_timing_sequence_checks():
     assert q.is_prefix_connected((0, 1, 2))
     assert not q.is_prefix_connected((2, 0, 1)) or True  # (2,0): share v2? e2=(2,3), e0=(0,1) -> no
     assert not q.is_prefix_connected((0, 2, 1))
+
+
+def test_tc_subquery_enumeration_deterministic():
+    """The Algorithm-5 traversal is an iterative DFS (explicit LIFO
+    stack) and its first-witness enumeration order is LOAD-BEARING: it
+    flows into ``plan_signature`` (slot-group sharing) and checkpoint
+    manifests, so this test pins the exact order for the paper's
+    Figure-2 query.  If it ever changes (e.g. a switch to BFS), bump
+    checkpoint compatibility deliberately — don't let it drift."""
+    q = example_paper_query()
+    golden = [(5,), (5, 4), (5, 4, 3), (4,), (4, 3), (3,),
+              (2,), (2, 0), (1,), (0,)]
+    for _ in range(3):  # stable across repeated enumeration
+        assert [s.timing_sequence for s in tc_subqueries(q)] == golden
+    # downstream: the decomposition/join-order pipeline is pinned too
+    dec = join_order(q, decompose(q))
+    assert [s.timing_sequence for s in dec] == [(5, 4, 3), (2, 0), (1,)]
