@@ -1,0 +1,152 @@
+"""Ingestion-frontier benchmark: sustained throughput + tick latency
+under increasing delivery disorder.
+
+``BENCH_tick.json`` scores the serving loop over a pre-ordered edge
+list; this benchmark scores the PRODUCTION INGRESS path in front of it:
+seeded multi-source delivery scripts (``disordered_sources``) feed
+``ScriptedSource``s through the fault-tolerant frontier — per-source
+dedup, deterministic k-way event-time merge, watermark-gated release —
+into ``ContinuousSearchService.serve_frontier``.  Swept over the
+disorder fraction (0%, 1%, 10% of deliveries displaced late, plus
+transport duplicates at the 10% point), so the cost of the reorder
+buffer and watermark machinery relative to the ordered fast path is
+machine-trackable per PR.
+
+Output: ``BENCH_ingest.json`` at the repo root (schema
+``bench_ingest/v1``): sustained edges/s and p50/p99 tick latency per
+(backend × disorder) cell, with the frontier's duplicate/late-drop
+accounting embedded so a regression in EITHER speed or exactly-once
+accounting trips the CI schema gate.  ``--dry`` emits the same schema
+at tiny scale (the CI smoke gate).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.core.join import JoinBackend
+from repro.core.multi import SlotTickCache
+from repro.core.query import QueryGraph
+from repro.runtime.fault import RetryPolicy
+from repro.runtime.service import ContinuousSearchService
+from repro.stream.generator import (
+    DisorderConfig, StreamConfig, disordered_sources, synth_traffic_stream)
+from repro.stream.ingest import IngestFrontier, ScriptedSource
+
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_ingest.json")
+
+CAP = dict(level_capacity=512, l0_capacity=512, max_new=128)
+DISORDER_FRACS = (0.0, 0.01, 0.10)
+
+
+def _queries():
+    chain = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2)),
+                       prec=frozenset({(0, 1)}))
+    tri = QueryGraph(3, (0, 1, 2), ((0, 1), (1, 2), (2, 0)),
+                     prec=frozenset({(0, 1), (1, 2)}))
+    return [(chain, 30), (tri, 30)]
+
+
+def _frontier(stream, disorder_frac: float, n_sources: int):
+    cfg = DisorderConfig(
+        n_sources=n_sources, disorder_frac=disorder_frac, max_delay=8,
+        duplicate_rate=0.05 if disorder_frac >= 0.10 else 0.0, seed=23)
+    scripts = disordered_sources(stream, cfg)
+    return IngestFrontier(
+        [ScriptedSource(f"s{i}", sc) for i, sc in enumerate(scripts)],
+        allowed_lateness=64, sleep=lambda d: None,
+        retry=RetryPolicy(base_delay_s=0.0, jitter_frac=0.0))
+
+
+def bench_cell(backend: str, disorder_frac: float, n_edges: int,
+               batch: int, n_sources: int, tc: SlotTickCache,
+               warmup_edges: int) -> dict:
+    stream = synth_traffic_stream(StreamConfig(
+        n_edges=n_edges + warmup_edges, n_vertices=60, n_vertex_labels=3,
+        n_edge_labels=4, seed=29, ts_step_max=2))
+    svc = ContinuousSearchService(slots_per_group=4, backend=backend,
+                                  tick_cache=tc, **CAP)
+    for q, w in _queries():
+        svc.register(q, w)
+
+    lat = []
+    serve = dict(batch_size=batch, min_batch=batch, max_batch=batch,
+                 on_tick=lambda i: lat.append(i.latency_ms))
+    # compile + warm on the ordered prefix, then time the swept tail
+    svc.serve_frontier(_frontier(stream[:warmup_edges], 0.0, n_sources),
+                       **serve)
+    lat.clear()
+    fr = _frontier(stream[warmup_edges:], disorder_frac, n_sources)
+    t0 = time.perf_counter()
+    svc.serve_frontier(fr, **serve)
+    wall = time.perf_counter() - t0
+
+    s = fr.stats()
+    lat_sorted = sorted(lat)
+    pick = lambda q: round(
+        lat_sorted[min(len(lat_sorted) - 1, int(q * len(lat_sorted)))], 3) \
+        if lat_sorted else 0.0
+    return {
+        "bench": "ingest_frontier",
+        "backend": backend,
+        "disorder_frac": disorder_frac,
+        "n_sources": n_sources,
+        "batch": batch,
+        "n_edges": n_edges,
+        "n_ticks": len(lat),
+        "edges_per_s": round(n_edges / wall, 1),
+        "ms_per_tick_p50": pick(0.50),
+        "ms_per_tick_p99": pick(0.99),
+        "n_emitted": int(s.n_emitted),
+        "n_duplicates": int(s.n_duplicates),
+        "n_late_dropped": int(s.n_late_dropped),
+    }
+
+
+def bench_ingest_json(reduced: bool = True, dry: bool = False) -> str:
+    """Assemble and write ``BENCH_ingest.json`` at the repo root."""
+    if dry:
+        n_edges, batch, n_sources, warmup = 256, 32, 3, 64
+    elif reduced:
+        n_edges, batch, n_sources, warmup = 2048, 64, 3, 128
+    else:
+        n_edges, batch, n_sources, warmup = 16384, 128, 4, 256
+
+    backends = [JoinBackend.REF, JoinBackend.PALLAS_INTERPRET]
+    if jax.default_backend() == "tpu":
+        backends.append(JoinBackend.PALLAS)
+
+    tc = SlotTickCache()
+    results = [bench_cell(b, frac, n_edges, batch, n_sources, tc, warmup)
+               for b in backends for frac in DISORDER_FRACS]
+    doc = {
+        "schema": "bench_ingest/v1",
+        "mode": "dry" if dry else ("reduced" if reduced else "full"),
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "note": ("serve_frontier over seeded multi-source delivery "
+                 "scripts: per-source dedup + k-way event-time merge + "
+                 "watermark release, swept over the fraction of "
+                 "deliveries displaced late; duplicate/late-drop "
+                 "accounting embedded per cell"),
+        "results": results,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# BENCH_ingest.json -> {JSON_PATH} ({len(results)} rows)")
+    for r in results:
+        print(f"#   ingest {r['backend']} disorder={r['disorder_frac']}: "
+              f"{r['edges_per_s']} e/s, p50 {r['ms_per_tick_p50']} ms, "
+              f"p99 {r['ms_per_tick_p99']} ms "
+              f"({r['n_duplicates']} dups, {r['n_late_dropped']} late)")
+    return JSON_PATH
+
+
+if __name__ == "__main__":
+    bench_ingest_json()

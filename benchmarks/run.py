@@ -8,6 +8,9 @@ compat_join_pairs vs mask+nonzero bytes model — see
 ``benchmarks.bench_kernels.bench_join_json``), ``BENCH_tick.json``
 (engine-level: end-to-end ``serve_stream`` tick cost per backend through
 the ``repro.api`` session — see ``benchmarks.bench_service``),
+``BENCH_ingest.json`` (ingress-level: ``serve_frontier`` throughput and
+tick latency through the fault-tolerant multi-source frontier at 0%/1%/
+10% delivery disorder — see ``benchmarks.bench_ingest``),
 ``BENCH_share.json`` (cross-tenant prefix sharing: shared vs unshared
 tick cost and table bytes at N tenants × overlap fraction — see
 ``benchmarks.bench_share``) and ``BENCH_analysis.json`` (static-analysis
@@ -31,6 +34,7 @@ import time
 from benchmarks import (
     bench_analysis,
     bench_engine,
+    bench_ingest,
     bench_kernels,
     bench_multiquery,
     bench_service,
@@ -52,6 +56,7 @@ def main() -> None:
     if args.dry:
         bench_kernels.bench_join_json(reduced=True, dry=True)
         bench_service.bench_tick_json(reduced=True, dry=True)
+        bench_ingest.bench_ingest_json(reduced=True, dry=True)
         bench_share.bench_share_json(reduced=True, dry=True)
         bench_analysis.bench_analysis_json(reduced=True, dry=True)
         print(f"# total bench wall time: {time.time() - t0:.1f}s")
@@ -67,6 +72,7 @@ def main() -> None:
     bench_kernels.compat_join_scaling(reduced)
     bench_kernels.bench_join_json(reduced=reduced)    # BENCH_join.json
     bench_service.bench_tick_json(reduced=reduced)    # BENCH_tick.json
+    bench_ingest.bench_ingest_json(reduced=reduced)   # BENCH_ingest.json
     bench_share.bench_share_json(reduced=reduced)     # BENCH_share.json
     bench_analysis.bench_analysis_json(reduced=reduced)  # BENCH_analysis.json
     bench_multiquery.main(                            # multi-tenant serving

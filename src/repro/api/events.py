@@ -129,6 +129,16 @@ def to_data_edge(event, vocab: LabelVocab) -> DataEdge:
     )
 
 
+def as_source(name: str, events, vocab: LabelVocab):
+    """Lower a list of typed ``Event``s (or raw ``DataEdge``s) into a
+    resumable ``repro.stream.ingest.ListSource`` for the ingestion
+    frontier — the session-side source registration hook
+    (``StreamSession.sources``).  The vocab translation happens here,
+    once, so the frontier and engine speak dense ids only."""
+    from repro.stream.ingest import ListSource
+    return ListSource(name, [to_data_edge(e, vocab) for e in events])
+
+
 class Match(NamedTuple):
     """One reported match, in the pattern's own vocabulary.
 

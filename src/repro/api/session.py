@@ -48,6 +48,7 @@ from repro.api.events import (
     EventBuffer,
     LabelVocab,
     Match,
+    as_source,
     to_data_edge,
 )
 from repro.api.pattern import Pattern
@@ -80,6 +81,13 @@ class SessionStatus(NamedTuple):
     n_ticks: int
     n_compiles: int
     degraded: tuple      # qids whose slot tables have overflowed
+    # ingest-frontier health (None until a frontier serves this session)
+    ingest: object = None          # IngestStats of the bound frontier
+    n_late_dropped: int = 0        # frontier late drops (cumulative)
+    n_duplicates: int = 0          # suppressed duplicate deliveries
+    n_reconnects: int = 0          # source reconnects survived
+    health: str = ACTIVE           # DEGRADED when overflow OR the
+                                   # late-drop rate crosses the threshold
 
 
 class Subscription:
@@ -232,6 +240,7 @@ class StreamSession:
         keep_checkpoints: int = 8,
         tick_cache=None,
         share_prefixes: bool = False,
+        late_drop_threshold: float = 0.01,
         _service: ContinuousSearchService | None = None,
     ):
         if _service is None:
@@ -252,6 +261,11 @@ class StreamSession:
         self.vocab = LabelVocab()
         self._subs: dict[int, Subscription] = {}
         self._coalescer: TickCoalescer | None = None
+        # session health turns DEGRADED when the frontier's late-drop
+        # rate (drops / delivered) crosses this; 0 disables the margin
+        # (any drop degrades)
+        self.late_drop_threshold = late_drop_threshold
+        self._frontier = None
         # session state rides inside every service checkpoint manifest
         self.service.manifest_extra = self._api_manifest
 
@@ -381,18 +395,96 @@ class StreamSession:
                 if qid in self._subs}
 
     # ------------------------------------------------------------------ #
+    # ingestion frontier: sources in, watermark-ordered ticks out
+    # ------------------------------------------------------------------ #
+    def sources(self, named_events: dict, resume: dict | None = None,
+                **frontier_kw):
+        """Build an ``IngestFrontier`` over named event streams.
+
+        ``named_events`` maps source name -> a list of typed ``Event``s
+        / raw ``DataEdge``s (vocab-translated here), OR an already-built
+        ``repro.stream.ingest`` ``Source`` (e.g. a chaos-wrapped one),
+        passed through as-is.  ``resume`` is a restored ingest manifest
+        (``session.restored_ingest``): sources reconnect at their ack
+        cursors and replayed deliveries are suppressed — the
+        exactly-once mid-stream resume.  Keyword args flow to
+        ``IngestFrontier`` (``allowed_lateness``, ``retry``, ...).
+        """
+        from repro.stream.ingest import IngestFrontier, Source
+        srcs = [ev if isinstance(ev, Source) else
+                as_source(name, ev, self.vocab)
+                for name, ev in named_events.items()]
+        if resume is not None:
+            return IngestFrontier.resume(resume, srcs, **frontier_kw)
+        return IngestFrontier(srcs, **frontier_kw)
+
+    def serve_frontier(self, frontier, ckpt_every: int = 0,
+                       batch_size: int = 64, min_batch: int | None = None,
+                       max_batch: int | None = None,
+                       target_latency_ms: float = 50.0, on_tick=None,
+                       final_checkpoint: bool = True,
+                       max_idle_rounds: int | None = None) -> dict:
+        """Serve from an ingestion frontier: retry/dedup per source,
+        deterministic k-way event-time merge, watermark-driven ticking.
+
+        Same contract as ``serve`` otherwise: matches route to each
+        subscription, the AIMD coalescer persists across calls, and
+        checkpoints written during the loop embed the frontier's resume
+        cursors (see ``restored_ingest``).  ``status()`` reports the
+        frontier's late-drop / duplicate / reconnect accounting, turning
+        DEGRADED when the late-drop rate crosses
+        ``late_drop_threshold`` — no event vanishes silently.
+        """
+        self._frontier = frontier
+
+        def _on_match(qid, bindings, ets):
+            sub = self._subs.get(qid)
+            if sub is not None:
+                sub._deliver_rows(bindings, ets)
+
+        if self._coalescer is None:
+            self._coalescer = TickCoalescer.seeded(
+                batch_size, min_batch, max_batch, target_latency_ms)
+        totals = self.service.serve_frontier(
+            frontier, on_match=_on_match, on_tick=on_tick,
+            ckpt_every=ckpt_every, coalescer=self._coalescer,
+            final_checkpoint=final_checkpoint,
+            max_idle_rounds=max_idle_rounds)
+        return {self._subs[qid]: n for qid, n in totals.items()
+                if qid in self._subs}
+
+    @property
+    def restored_ingest(self) -> dict | None:
+        """Ingest resume manifest from the checkpoint this session was
+        restored from (None on a fresh session): pass to ``sources(...,
+        resume=...)`` to pick the stream back up exactly-once."""
+        return self.service.restored_ingest
+
+    # ------------------------------------------------------------------ #
     def subscriptions(self) -> list[Subscription]:
         return [self._subs[qid] for qid in sorted(self._subs)]
 
     def status(self) -> SessionStatus:
         svc = self.service
+        degraded = tuple(qid for qid, s in sorted(self._subs.items())
+                         if s.n_overflow > 0)
+        ing = None if self._frontier is None else self._frontier.stats()
+        n_late = 0 if ing is None else ing.n_late_dropped
+        drop_rate = 0.0 if ing is None else (
+            n_late / max(1, n_late + ing.n_emitted))
+        health = DEGRADED if degraded or drop_rate > self.late_drop_threshold \
+            else ACTIVE
         return SessionStatus(
             n_subscriptions=len(self._subs),
             n_edges_ingested=svc.n_edges_ingested,
             n_ticks=svc.n_ticks,
             n_compiles=svc.n_compiles,
-            degraded=tuple(qid for qid, s in sorted(self._subs.items())
-                           if s.n_overflow > 0),
+            degraded=degraded,
+            ingest=ing,
+            n_late_dropped=n_late,
+            n_duplicates=0 if ing is None else ing.n_duplicates,
+            n_reconnects=0 if ing is None else ing.n_reconnects,
+            health=health,
         )
 
     @property

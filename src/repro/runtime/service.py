@@ -146,6 +146,12 @@ class ServeInfo(NamedTuple):
                             # (shared-prefix drops attributed per tenant,
                             # matching the unshared engine's counters)
     n_shared_prefix_ticks: int = 0   # forest nodes advanced this tick
+    # ingest-frontier observability (``serve_frontier`` only; the plain
+    # ``serve_stream`` path leaves the defaults)
+    watermark: int | None = None     # event-time watermark after this tick
+    n_late_dropped: int = 0          # frontier late drops this tick
+    n_duplicates: int = 0            # suppressed duplicate deliveries, tick
+    n_reconnects: int = 0            # source reconnects this tick
 
 
 @dataclass(eq=False)       # identity semantics: fields hold device arrays
@@ -218,6 +224,8 @@ class ContinuousSearchService:
             donate=self.donate) if enable_sharing else None)
         self._prefix_of: dict[int, object] = {}   # qid -> leaf PrefixNode
         self._next_gid = 0
+        self._frontier = None        # IngestFrontier bound by serve_frontier
+        self.restored_ingest = None  # ingest manifest from restore()
         self._ckpt_step = 0          # last step id written (monotonic)
         self.n_compiles = 0          # build_slot_tick cache misses (this service)
         self.n_edges_ingested = 0
@@ -498,39 +506,14 @@ class ContinuousSearchService:
         totals: dict[int, int] = {}
         i, n = 0, len(edges)
         while i < n:
-            active = [g for g in self._iter_groups() if not g.idle]
             chunk = edges[i:i + coalescer.batch]
-            batch = make_batch(
-                **to_batches(chunk, quantize_pow2(len(chunk)))[0])
             queue_depth = n - (i + len(chunk))
-            t0 = time.perf_counter()
-            views, forest_nds = self._advance_forest(batch)
-            results = [(g, self._advance_group(g, batch, views, forest_nds))
-                       for g in active]
-            jax.block_until_ready(                              # the barrier
-                [g.sstate for g in active]
-                + ([] if self.forest is None else self.forest.states()))
-            lat_ms = (time.perf_counter() - t0) * 1e3
-            tick_overflow = 0
-            for g, res in results:
-                for k, qid in enumerate(g.qids):
-                    if qid is None:
-                        continue
-                    r = jax.tree.map(lambda x, k=k: x[k], res)
-                    n_new = int(r.n_new_matches)
-                    tick_overflow += int(r.n_overflow)
-                    totals[qid] = totals.get(qid, 0) + n_new
-                    if n_new and on_match is not None:
-                        valid = np.asarray(r.match_valid)
-                        on_match(qid,
-                                 np.asarray(r.match_bindings)[valid],
-                                 np.asarray(r.match_ets)[valid])
+            lat_ms, tick_overflow, n_shared = self._tick_chunk(
+                chunk, on_match, totals)
             # overflow joins latency and queue depth as a throttle input:
             # dropped appends mean the tick was too big for the tables
             coalescer.record(lat_ms, queue_depth, tick_overflow)
             i += len(chunk)
-            self.n_ticks += 1
-            self.n_edges_ingested += len(chunk)
             if self.ckpt and ckpt_every and self.n_ticks % ckpt_every == 0:
                 self.checkpoint()
             if on_tick is not None:
@@ -540,14 +523,146 @@ class ContinuousSearchService:
                     chunk=len(chunk),
                     latency_ms=lat_ms,
                     n_overflow=tick_overflow,
-                    n_shared_prefix_ticks=len(views),
+                    n_shared_prefix_ticks=n_shared,
                 ))
+        self._final_checkpoint(ckpt_every, final_checkpoint)
+        return totals
+
+    def _tick_chunk(self, chunk: list, on_match, totals: dict
+                    ) -> tuple[float, int, int]:
+        """One production tick over ``chunk`` (a DataEdge list): pow-2
+        padded batch, async group dispatch, ONE barrier, match delivery.
+        Updates ``totals``/counters in place; returns (barrier latency
+        ms, tick overflow, shared-prefix node count).  Shared by
+        ``serve_stream`` (arrival-order chunks) and ``serve_frontier``
+        (watermark-order chunks)."""
+        active = [g for g in self._iter_groups() if not g.idle]
+        batch = make_batch(
+            **to_batches(chunk, quantize_pow2(len(chunk)))[0])
+        t0 = time.perf_counter()
+        views, forest_nds = self._advance_forest(batch)
+        results = [(g, self._advance_group(g, batch, views, forest_nds))
+                   for g in active]
+        jax.block_until_ready(                              # the barrier
+            [g.sstate for g in active]
+            + ([] if self.forest is None else self.forest.states()))
+        lat_ms = (time.perf_counter() - t0) * 1e3
+        tick_overflow = 0
+        for g, res in results:
+            for k, qid in enumerate(g.qids):
+                if qid is None:
+                    continue
+                r = jax.tree.map(lambda x, k=k: x[k], res)
+                n_new = int(r.n_new_matches)
+                tick_overflow += int(r.n_overflow)
+                totals[qid] = totals.get(qid, 0) + n_new
+                if n_new and on_match is not None:
+                    valid = np.asarray(r.match_valid)
+                    on_match(qid,
+                             np.asarray(r.match_bindings)[valid],
+                             np.asarray(r.match_ets)[valid])
+        self.n_ticks += 1
+        self.n_edges_ingested += len(chunk)
+        return lat_ms, tick_overflow, len(views)
+
+    def _final_checkpoint(self, ckpt_every: int, final: bool) -> None:
         if self.ckpt:
-            if ckpt_every and final_checkpoint and \
+            if ckpt_every and final and \
                     self.n_ticks % ckpt_every != 0 and \
                     self.n_ticks > self._ckpt_step:
                 self.checkpoint()       # final end-of-call durability
             self.ckpt.wait()
+
+    def serve_frontier(
+        self,
+        frontier,
+        on_match=None,
+        on_tick=None,
+        ckpt_every: int = 0,
+        batch_size: int = 64,
+        min_batch: int | None = None,
+        max_batch: int | None = None,
+        target_latency_ms: float = 50.0,
+        coalescer: TickCoalescer | None = None,
+        final_checkpoint: bool = True,
+        pump_size: int = 64,
+        max_idle_rounds: int | None = None,
+    ) -> dict[int, int]:
+        """Drive the service from an ``IngestFrontier`` (the real-traffic
+        production loop): sources -> retry/dedup -> k-way merge ->
+        watermark -> tick.
+
+        The coalescer ticks on WATERMARK ADVANCE, not arrival order:
+        each round pumps every live source, takes the events the
+        watermark has released (in deterministic merged event-time
+        order, at most the coalescer's batch), and ticks only when
+        something is ready — an all-sources stall is an idle round
+        (``TickCoalescer.record_idle``), not a tick of garbage.  The
+        frontier is bound to the service for the duration, so
+        checkpoints written during the loop embed its resume state
+        (per-source ack cursors + emit floor) in the manifest:
+        ``ContinuousSearchService.restore`` surfaces it as
+        ``restored_ingest`` and ``IngestFrontier.resume`` picks the
+        stream back up exactly-once (replayed deliveries suppressed).
+
+        ``ServeInfo`` gains the frontier fields: ``watermark`` and the
+        per-tick ``n_late_dropped`` / ``n_duplicates`` /
+        ``n_reconnects`` deltas — no event leaves the pipeline
+        unaccounted.  ``max_idle_rounds`` bounds how many consecutive
+        empty rounds to tolerate before returning (None: serve until
+        every source is exhausted); the frontier stays resumable either
+        way.  Returns ``{qid: total new matches}``.
+        """
+        if on_match is not None and not self.extract_matches:
+            raise ValueError(
+                "on_match requires a service with extract_matches=True")
+        if ckpt_every and self.ckpt is None:
+            raise ValueError(
+                "ckpt_every requires a service with ckpt_dir set — "
+                "without it every checkpoint would be a silent no-op")
+        if coalescer is None:
+            coalescer = TickCoalescer.seeded(
+                batch_size, min_batch, max_batch, target_latency_ms)
+        totals: dict[int, int] = {}
+        # stays bound after return, so later checkpoints (tenant churn,
+        # shutdown) keep embedding the stream cursors — unbinding would
+        # make a post-serve restore silently replay the whole stream
+        self._frontier = frontier
+        prev = frontier.stats()
+        idle = 0
+        while not frontier.exhausted:
+            frontier.pump(pump_size)
+            chunk = frontier.take_ready(limit=coalescer.batch)
+            if not chunk:
+                idle += 1
+                coalescer.record_idle()
+                if max_idle_rounds is not None and idle > max_idle_rounds:
+                    break
+                continue
+            idle = 0
+            lat_ms, tick_overflow, n_shared = self._tick_chunk(
+                chunk, on_match, totals)
+            coalescer.record(lat_ms, frontier.buffered, tick_overflow)
+            if self.ckpt and ckpt_every and \
+                    self.n_ticks % ckpt_every == 0:
+                self.checkpoint()
+            if on_tick is not None:
+                cur = frontier.stats()
+                on_tick(ServeInfo(
+                    tick=self.n_ticks,
+                    n_edges_ingested=self.n_edges_ingested,
+                    chunk=len(chunk),
+                    latency_ms=lat_ms,
+                    n_overflow=tick_overflow,
+                    n_shared_prefix_ticks=n_shared,
+                    watermark=cur.watermark,
+                    n_late_dropped=cur.n_late_dropped
+                    - prev.n_late_dropped,
+                    n_duplicates=cur.n_duplicates - prev.n_duplicates,
+                    n_reconnects=cur.n_reconnects - prev.n_reconnects,
+                ))
+                prev = cur
+        self._final_checkpoint(ckpt_every, final_checkpoint)
         return totals
 
     # ------------------------------------------------------------------ #
@@ -602,6 +717,11 @@ class ContinuousSearchService:
             ],
             "forest": (None if self.forest is None
                        else self.forest.to_manifest()),
+            # ingest-frontier resume state (serve_frontier binds it):
+            # per-source ack cursors + emit floor, so a restored service
+            # can resume mid-stream exactly-once (IngestFrontier.resume)
+            "ingest": (None if self._frontier is None
+                       else self._frontier.to_manifest()),
             "counters": {
                 "n_edges_ingested": int(self.n_edges_ingested),
                 "n_ticks": int(self.n_ticks),
@@ -683,6 +803,7 @@ class ContinuousSearchService:
         svc = cls(ckpt_dir=ckpt_dir, tick_cache=tick_cache,
                   **{**man["config"], **overrides})
         svc.manifest_extra = man.get("extra", {})
+        svc.restored_ingest = man.get("ingest")
         for qid_s, ent in man["queries"].items():
             svc.registry.adopt(
                 int(qid_s), QueryGraph.from_spec(ent["query"]),

@@ -90,3 +90,16 @@ class TickCoalescer:
         elif self._ema_latency > self.target_latency_ms:
             self.batch = max(self.min_batch, int(self.batch * 0.8))  # AD
         return self.batch
+
+    def record_idle(self) -> int:
+        """Report an EMPTY serving round (watermark-driven serving:
+        sources stalled or the reorder buffer is holding everything
+        back, so there was no tick).  The batch must not move — idle
+        rounds carry no latency or queue signal, and growing on them
+        would let a stalled stream inflate the batch unboundedly — but
+        the latency EMA decays toward zero so a long stall does not
+        leave a stale overload reading that would shrink the batch on
+        the first real tick afterwards.
+        """
+        self._ema_latency *= 0.7
+        return self.batch

@@ -1,8 +1,28 @@
-"""Stream substrate: synthetic edge-stream generators and windowing."""
+"""Stream substrate: generators, the fault-tolerant ingestion frontier,
+and the chaos (fault-injection) harness."""
 
 from repro.stream.generator import (
+    DisorderConfig,
     StreamConfig,
-    synth_traffic_stream,
-    synth_social_stream,
+    disordered_sources,
     random_walk_query,
+    split_stream,
+    synth_social_stream,
+    synth_traffic_stream,
 )
+from repro.stream.ingest import (
+    CallbackRegistry,
+    IngestError,
+    IngestFrontier,
+    IngestStats,
+    ListSource,
+    MonotonicityError,
+    ScriptedSource,
+    SeqTracker,
+    Source,
+    SourceAdapter,
+    SourceDisconnected,
+    SourceEvent,
+    merge_event_streams,
+)
+from repro.stream.chaos import ChaosConfig, ChaosDisconnect, ChaosSource

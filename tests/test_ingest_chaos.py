@@ -1,0 +1,271 @@
+"""Differential chaos harness for the fault-tolerant ingestion frontier.
+
+The whole point of ``repro.stream.ingest`` + ``repro.stream.chaos``:
+transport faults must be INVISIBLE to the match stream, and anything
+that cannot be delivered must be counted, never silently lost.  Proof by
+differential execution, on REF and PALLAS_INTERPRET:
+
+* run A — the pre-ordered single-stream reference: ``serve_stream`` over
+  the canonical edge list (itself oracle-cross-checked in
+  tests/test_service_restore.py);
+* run B — the same traffic split across sources, deliveries reordered
+  and duplicated (seeded ``disordered_sources`` scripts), each source
+  wrapped in ``ChaosSource`` injecting disconnects-with-rewind,
+  duplicate delivery, reordering, stalls, and torn batches; served
+  through ``serve_frontier``.
+
+Run B must report EXACTLY run A's match multiset, and the frontier's
+accounting must reconcile: every delivery is emitted once, suppressed as
+a counted duplicate, or dropped as a counted late event.
+
+Plus the crash/restore differential THROUGH the ingest layer: kill the
+serving loop mid-stream (``SimulatedFailure``), restore from the newest
+checkpoint, rebuild the frontier from the checkpointed ingest manifest
+(``IngestFrontier.resume``) over fresh chaos-wrapped sources, replay —
+the exactly-once multiset again, now across a process boundary.
+"""
+
+from collections import Counter
+
+import pytest
+
+from repro.core.join import JoinBackend
+from repro.core.multi import SlotTickCache
+from repro.core.oracle import DataEdge
+from repro.runtime.fault import RetryPolicy, SimulatedFailure
+from repro.runtime.service import ContinuousSearchService
+from repro.stream.chaos import ChaosConfig, ChaosSource
+from repro.stream.generator import DisorderConfig, disordered_sources
+from repro.stream.ingest import IngestFrontier, ListSource, ScriptedSource
+
+from test_engine_oracle import small_stream, tri_query
+from test_service_restore import CAP, SERVE, EventLog, chain_query
+
+QUERIES = [(chain_query(), 20), (tri_query(), 25)]
+NO_SLEEP = dict(sleep=lambda d: None)
+RETRY = RetryPolicy(max_attempts=8, base_delay_s=0.0, jitter_frac=0.0)
+
+
+def _fresh(backend, tc, ckpt_dir=None):
+    svc = ContinuousSearchService(
+        slots_per_group=2, backend=backend, tick_cache=tc,
+        ckpt_dir=None if ckpt_dir is None else str(ckpt_dir), **CAP)
+    qids = [svc.register(q, w) for q, w in QUERIES]
+    return svc, qids
+
+
+def _chaos_sources(stream, lateness_safe=True, seed=0):
+    """The stream as 3 disordered/duplicated delivery scripts, each
+    behind a fault-injecting transport."""
+    scripts = disordered_sources(stream, DisorderConfig(
+        n_sources=3, disorder_frac=0.3, max_delay=6, duplicate_rate=0.1,
+        seed=seed + 1))
+    cfg = ChaosConfig(seed=seed + 2, p_disconnect=0.08, rewind=4,
+                      p_duplicate=0.05, reorder_span=3, p_reorder=0.2,
+                      p_stall=0.05, stall_len=2, p_torn=0.05)
+    return [ChaosSource(ScriptedSource(f"s{i}", sc),
+                        ChaosConfig(**{**cfg.__dict__, "seed": seed + 2 + i}))
+            for i, sc in enumerate(scripts)]
+
+
+@pytest.mark.parametrize(
+    "backend", [JoinBackend.REF, JoinBackend.PALLAS_INTERPRET])
+def test_chaos_differential(backend):
+    """Chaos-wrapped multi-source serving == pre-ordered serving, exactly
+    (match multisets AND window contents), with full delivery
+    accounting."""
+    tc = SlotTickCache()
+    stream = small_stream(160, n_vertices=9, seed=61)
+
+    svc_a, qids = _fresh(backend, tc)
+    log_a = EventLog(svc_a)
+    svc_a.serve_stream(stream, on_match=log_a.on_match,
+                       on_tick=log_a.on_tick, **SERVE)
+    count_a = Counter((qid, k) for qid, k, _ in log_a.events)
+    assert count_a and max(count_a.values()) == 1
+
+    srcs = _chaos_sources(stream, seed=7)
+    fr = IngestFrontier(srcs, allowed_lateness=80, stall_patience=4,
+                        retry=RETRY, **NO_SLEEP)
+    svc_b, qids_b = _fresh(backend, tc)
+    assert qids_b == qids
+    log_b = EventLog(svc_b)
+    infos = []
+    svc_b.serve_frontier(fr, on_match=log_b.on_match,
+                         on_tick=lambda i: (infos.append(i),
+                                            log_b.on_tick(i)), **SERVE)
+
+    # the differential: transport faults never perturb the match stream
+    count_b = Counter((qid, k) for qid, k, _ in log_b.events)
+    assert count_b == count_a
+    for qid in qids:
+        assert svc_b.matches(qid) == svc_a.matches(qid)
+
+    # accounting: every delivery emitted exactly once or counted
+    s = fr.stats()
+    assert s.n_emitted == len(stream) and s.n_late_dropped == 0
+    assert s.n_duplicates > 0                 # scripts + chaos injected
+    assert s.n_reconnects > 0                 # disconnects were survived
+    assert sum(c.n_injected_disconnects for c in srcs) > 0
+    assert sum(c.n_injected_duplicates for c in srcs) > 0
+    # per-tick ServeInfo deltas reconcile with the frontier totals
+    assert sum(i.n_duplicates for i in infos) == s.n_duplicates
+    assert sum(i.n_reconnects for i in infos) == s.n_reconnects
+    assert sum(i.n_late_dropped for i in infos) == 0
+    assert any(i.watermark is not None for i in infos)
+    assert svc_b.n_edges_ingested == len(stream)
+
+
+def test_chaos_source_default_config_is_passthrough():
+    stream = small_stream(50, seed=62)
+    plain = ListSource("s", stream)
+    plain.connect()
+    want = []
+    while not plain.exhausted:
+        want.extend(plain.poll(7))
+    wrapped = ChaosSource(ListSource("s", stream))
+    wrapped.connect()
+    got = []
+    while not wrapped.exhausted:
+        got.extend(wrapped.poll(7))
+    assert got == want
+    assert wrapped.name == "s"
+    assert wrapped.n_injected_disconnects == 0
+    assert wrapped.n_injected_duplicates == 0
+
+
+def test_chaos_with_tight_lateness_drops_are_counted_not_silent():
+    """Under a tight lateness bound some deliveries DO die — but the
+    accounting invariant must still reconcile every single one:
+    Counter(emitted) + Counter(dropped) == Counter(original)."""
+    stream = small_stream(200, n_vertices=9, seed=63)
+    scripts = disordered_sources(stream, DisorderConfig(
+        n_sources=3, disorder_frac=0.5, max_delay=10, seed=17))
+    fr = IngestFrontier(
+        [ScriptedSource(f"s{i}", sc) for i, sc in enumerate(scripts)],
+        allowed_lateness=0, retry=RETRY, **NO_SLEEP)
+    dropped = []
+    fr.on("drop_late", lambda name, e, seq: dropped.append(e))
+    out = []
+    while not fr.exhausted:
+        out.extend(fr.drain())
+    s = fr.stats()
+    assert s.n_late_dropped == len(dropped) > 0
+    assert Counter(out) + Counter(dropped) == Counter(stream)
+    assert s.n_emitted + s.n_late_dropped == len(stream)
+    assert all(a.ts <= b.ts for a, b in zip(out, out[1:]))
+
+
+@pytest.mark.parametrize(
+    "backend", [JoinBackend.REF, JoinBackend.PALLAS_INTERPRET])
+def test_crash_restore_through_ingest(tmp_path, backend):
+    """Kill the frontier-driven loop mid-stream, restore, rebuild the
+    frontier from the checkpointed cursors over FRESH chaos-wrapped
+    sources, replay: the match multiset is exactly the uninterrupted
+    run's — nothing lost to the crash, nothing double-reported despite
+    the at-least-once replay."""
+    tc = SlotTickCache()
+    stream = small_stream(160, n_vertices=9, seed=64)
+
+    # run A: uninterrupted pre-ordered reference
+    svc_a, qids = _fresh(backend, tc)
+    log_a = EventLog(svc_a)
+    svc_a.serve_stream(stream, on_match=log_a.on_match,
+                       on_tick=log_a.on_tick, **SERVE)
+    count_a = Counter((qid, k) for qid, k, _ in log_a.events)
+
+    # run B: chaos frontier, crash at tick 5 (checkpoints every 3)
+    fr_b = IngestFrontier(_chaos_sources(stream, seed=31),
+                          allowed_lateness=80, stall_patience=4,
+                          retry=RETRY, **NO_SLEEP)
+    svc_b, _ = _fresh(backend, tc, ckpt_dir=tmp_path)
+    log_b = EventLog(svc_b, crash_at_tick=5)
+    with pytest.raises(SimulatedFailure):
+        svc_b.serve_frontier(fr_b, on_match=log_b.on_match,
+                             on_tick=log_b.on_tick, ckpt_every=3, **SERVE)
+    svc_b.ckpt.wait()
+
+    # restore: the checkpoint carries the ingest cursors
+    svc_r = ContinuousSearchService.restore(str(tmp_path), tick_cache=tc)
+    man = svc_r.restored_ingest
+    assert man is not None
+    assert {s["name"] for s in man["sources"]} == {"s0", "s1", "s2"}
+    assert svc_r.n_edges_ingested == man["counters"]["n_emitted"]
+
+    # exactly-once consumer: roll back reports newer than the checkpoint
+    kept = [(qid, k) for qid, k, off in log_b.events
+            if off <= svc_r.n_edges_ingested]
+
+    # resume over FRESH sources (same seeded scripts + chaos): replayed
+    # already-acked deliveries are suppressed by the restored trackers
+    fr_r = IngestFrontier.resume(
+        man, _chaos_sources(stream, seed=31), allowed_lateness=80,
+        stall_patience=4, retry=RETRY, **NO_SLEEP)
+    log_r = EventLog(svc_r)
+    svc_r.serve_frontier(fr_r, on_match=log_r.on_match,
+                         on_tick=log_r.on_tick, **SERVE)
+
+    count_b = Counter(kept) + Counter(
+        (qid, k) for qid, k, _ in log_r.events)
+    assert count_b == count_a
+    for qid in qids:
+        assert svc_r.matches(qid) == svc_a.matches(qid)
+    s = fr_r.stats()
+    assert s.n_emitted == len(stream)         # counters resumed, total exact
+    assert s.n_late_dropped == 0
+    assert svc_r.n_edges_ingested == len(stream)
+
+
+def test_frontier_manifest_rejects_unknown_sources():
+    fr = IngestFrontier([ListSource("a", [DataEdge(0, 1, 1, 0, 0, 0)])],
+                        **NO_SLEEP)
+    while not fr.exhausted:
+        fr.drain()
+    man = fr.to_manifest()
+    from repro.stream.ingest import IngestError
+    with pytest.raises(IngestError, match="not provided"):
+        IngestFrontier.resume(man, [ListSource("b", [])], **NO_SLEEP)
+
+
+def test_session_health_degrades_on_late_drops():
+    """Satellite (b): drop accounting surfaces end-to-end — SessionStatus
+    carries the frontier counters and health flips to DEGRADED when the
+    late-drop rate crosses the session threshold."""
+    from repro.api import ACTIVE, DEGRADED, StreamSession
+
+    def edge(ts):
+        return DataEdge(src=0, dst=1, ts=ts, src_label=0, dst_label=0,
+                        edge_label=0)
+
+    # source "b" delivers an ancient event on its SECOND pump round
+    # (scripts longer than one 64-event poll), long after the merged
+    # floor passed it: a guaranteed late drop under zero lateness
+    a_src = ListSource("a", [edge(t) for t in range(50, 56)])
+    b_script = [(i, edge(50 + i)) for i in range(64)] + [(64, edge(1))]
+
+    sess = StreamSession(slots_per_group=2, late_drop_threshold=0.01, **CAP)
+    sess.register_query(chain_query(), 20)
+    fr = sess.sources(
+        {"a": a_src, "b": ScriptedSource("b", b_script)},
+        allowed_lateness=0, retry=RETRY, **NO_SLEEP)
+    sess.serve_frontier(fr, batch_size=16)
+    st = sess.status()
+    assert st.n_late_dropped == 1
+    assert st.health == DEGRADED
+    assert st.ingest["n_emitted"] + st.n_late_dropped == 6 + 65
+
+    stream = small_stream(200, n_vertices=9, seed=65)
+    scripts = disordered_sources(stream, DisorderConfig(
+        n_sources=3, disorder_frac=0.5, max_delay=10, seed=19))
+
+    # generous lateness: same traffic, zero drops, healthy
+    sess2 = StreamSession(slots_per_group=2, **CAP)
+    sess2.register_query(chain_query(), 20)
+    fr2 = sess2.sources(
+        {f"s{i}": ScriptedSource(f"s{i}", sc)
+         for i, sc in enumerate(scripts)},
+        allowed_lateness=100, retry=RETRY, **NO_SLEEP)
+    sess2.serve_frontier(fr2, batch_size=16)
+    st2 = sess2.status()
+    assert st2.n_late_dropped == 0 and st2.health == ACTIVE
+    assert st2.n_duplicates == 0 and st2.n_reconnects == 0

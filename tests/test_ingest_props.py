@@ -1,0 +1,87 @@
+"""Property tests (hypothesis) for the deterministic k-way merge.
+
+The merge ladder (event_time -> received_time -> edge payload -> source
+order -> seq) must make the engine-facing order a pure function of the
+events, never of delivery accidents:
+
+1. permutation invariance — listing the per-source streams in any order
+   yields the identical merged sequence;
+2. tie-break determinism — repeated merges agree exactly, equal-ts runs
+   are payload-ordered, output is event-time sorted and
+   multiset-preserving;
+3. ``strict_event_time_monotonic`` raises on any per-source event-time
+   regression.
+"""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.oracle import DataEdge
+from repro.stream.ingest import MonotonicityError, merge_event_streams
+
+
+def edge(ts, src=0, dst=1, lab=0):
+    return DataEdge(src=src, dst=dst, ts=ts, src_label=0, dst_label=0,
+                    edge_label=lab)
+
+
+edges_st = st.builds(
+    edge,
+    ts=st.integers(0, 30),
+    src=st.integers(0, 4),
+    dst=st.integers(0, 4),
+    lab=st.integers(0, 2),
+)
+# per-source lists must be event-time ordered (what adapters deliver
+# after the reorder buffer); sort each generated list to enforce it
+streams_st = st.lists(
+    st.lists(edges_st, max_size=12).map(
+        lambda s: sorted(s, key=lambda e: e.ts)),
+    min_size=1, max_size=5)
+
+
+@settings(deadline=None, max_examples=80)
+@given(streams=streams_st, seed=st.integers(0, 2**16))
+def test_merge_permutation_invariant(streams, seed):
+    rng = np.random.default_rng(seed)
+    perm = list(rng.permutation(len(streams)))
+    merged = merge_event_streams(streams)
+    assert merge_event_streams([streams[i] for i in perm]) == merged
+    # merged output is event-time ordered and multiset-preserving
+    assert all(a.ts <= b.ts for a, b in zip(merged, merged[1:]))
+    assert Counter(merged) == sum((Counter(s) for s in streams), Counter())
+
+
+@settings(deadline=None, max_examples=60)
+@given(streams=streams_st)
+def test_merge_tiebreak_deterministic(streams):
+    merged = merge_event_streams(streams)
+    assert merge_event_streams(streams) == merged
+    # within an equal-ts run the ladder's payload level sorts it
+    i = 0
+    while i < len(merged):
+        j = i
+        while j < len(merged) and merged[j].ts == merged[i].ts:
+            j += 1
+        run = [(e.src, e.dst, e.edge_label, e.src_label, e.dst_label)
+               for e in merged[i:j]]
+        assert run == sorted(run)
+        i = j
+
+
+@settings(deadline=None, max_examples=60)
+@given(stream=st.lists(edges_st, min_size=2, max_size=12),
+       flip=st.integers(1, 11))
+def test_merge_strict_raises_on_any_regression(stream, flip):
+    ordered = sorted(stream, key=lambda e: e.ts)
+    merge_event_streams([ordered], strict_event_time_monotonic=True)
+    k = min(flip, len(ordered) - 1)
+    flipped = ordered[:k] + [edge(ordered[k - 1].ts - 31)] + ordered[k:]
+    with pytest.raises(MonotonicityError):
+        merge_event_streams([flipped], strict_event_time_monotonic=True)
