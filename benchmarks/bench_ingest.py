@@ -76,12 +76,22 @@ def bench_cell(backend: str, disorder_frac: float, n_edges: int,
         svc.register(q, w)
 
     lat = []
+    gauges = {"watermark_lag": 0, "window_staleness": 0}
+
+    def on_tick(i):
+        lat.append(i.latency_ms)
+        gauges["watermark_lag"] = max(gauges["watermark_lag"],
+                                      i.watermark_lag)
+        gauges["window_staleness"] = max(gauges["window_staleness"],
+                                         i.window_staleness)
+
     serve = dict(batch_size=batch, min_batch=batch, max_batch=batch,
-                 on_tick=lambda i: lat.append(i.latency_ms))
+                 on_tick=on_tick)
     # compile + warm on the ordered prefix, then time the swept tail
     svc.serve_frontier(_frontier(stream[:warmup_edges], 0.0, n_sources),
                        **serve)
     lat.clear()
+    gauges["watermark_lag"] = gauges["window_staleness"] = 0
     fr = _frontier(stream[warmup_edges:], disorder_frac, n_sources)
     t0 = time.perf_counter()
     svc.serve_frontier(fr, **serve)
@@ -106,6 +116,12 @@ def bench_cell(backend: str, disorder_frac: float, n_edges: int,
         "n_emitted": int(s.n_emitted),
         "n_duplicates": int(s.n_duplicates),
         "n_late_dropped": int(s.n_late_dropped),
+        "n_dropped_forced_gap": int(s.n_dropped_forced_gap),
+        # event-time health gauges (peak over the run): how far the
+        # freshest data ran ahead of the watermark, and how far forced
+        # evictions pushed the emit floor past it (0 = no capacity gap)
+        "watermark_lag_max": int(gauges["watermark_lag"]),
+        "window_staleness_max": int(gauges["window_staleness"]),
     }
 
 
@@ -126,15 +142,17 @@ def bench_ingest_json(reduced: bool = True, dry: bool = False) -> str:
     results = [bench_cell(b, frac, n_edges, batch, n_sources, tc, warmup)
                for b in backends for frac in DISORDER_FRACS]
     doc = {
-        "schema": "bench_ingest/v1",
+        "schema": "bench_ingest/v2",
         "mode": "dry" if dry else ("reduced" if reduced else "full"),
         "jax_version": jax.__version__,
         "platform": jax.default_backend(),
         "note": ("serve_frontier over seeded multi-source delivery "
                  "scripts: per-source dedup + k-way event-time merge + "
-                 "watermark release, swept over the fraction of "
-                 "deliveries displaced late; duplicate/late-drop "
-                 "accounting embedded per cell"),
+                 "watermark release driving event-time window clocks, "
+                 "swept over the fraction of deliveries displaced late; "
+                 "duplicate/late-drop/forced-gap accounting plus peak "
+                 "watermark-lag and window-staleness gauges embedded "
+                 "per cell"),
         "results": results,
     }
     with open(JSON_PATH, "w") as f:

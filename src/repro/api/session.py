@@ -86,8 +86,13 @@ class SessionStatus(NamedTuple):
     n_late_dropped: int = 0        # frontier late drops (cumulative)
     n_duplicates: int = 0          # suppressed duplicate deliveries
     n_reconnects: int = 0          # source reconnects survived
+    n_dropped_forced_gap: int = 0  # capacity-pressure drops (reorder
+                                   # buffer forced past the watermark)
+    watermark: int | None = None   # the frontier's event-time clock
     health: str = ACTIVE           # DEGRADED when overflow OR the
                                    # late-drop rate crosses the threshold
+                                   # OR forced-gap drops occurred
+                                   # (capacity pressure, never silent)
 
 
 class Subscription:
@@ -409,6 +414,16 @@ class StreamSession:
         cursors and replayed deliveries are suppressed — the
         exactly-once mid-stream resume.  Keyword args flow to
         ``IngestFrontier`` (``allowed_lateness``, ``retry``, ...).
+
+        ``allowed_lateness`` is an END-TO-END event-time contract, not
+        just a buffer knob: the frontier's watermark (min over live
+        sources of max event time, minus the lateness) gates release
+        AND drives every engine's window clock during
+        ``serve_frontier``, so an event within the allowed lateness is
+        guaranteed to find its still-unexpired join partners, and an
+        event beyond it is rejected-and-counted, never half-joined.
+        Larger lateness = more completeness, staler windows
+        (``SessionStatus.ingest.window_staleness`` gauges the trade).
         """
         from repro.stream.ingest import IngestFrontier, Source
         srcs = [ev if isinstance(ev, Source) else
@@ -430,10 +445,16 @@ class StreamSession:
         Same contract as ``serve`` otherwise: matches route to each
         subscription, the AIMD coalescer persists across calls, and
         checkpoints written during the loop embed the frontier's resume
-        cursors (see ``restored_ingest``).  ``status()`` reports the
-        frontier's late-drop / duplicate / reconnect accounting, turning
-        DEGRADED when the late-drop rate crosses
-        ``late_drop_threshold`` — no event vanishes silently.
+        cursors AND its event-time watermark (see ``restored_ingest``) —
+        a restored session resumes the same window clock, so nothing
+        re-expires or resurrects.  Windows are EVENT-time here: the
+        frontier's watermark drives engine admission/expiry every tick
+        (``serve``'s in-process path keeps the classic max-ts clock).
+        ``status()`` reports the frontier's late-drop / forced-gap /
+        duplicate / reconnect accounting, turning DEGRADED when the
+        late-drop rate crosses ``late_drop_threshold`` or any
+        capacity-pressure (forced-gap) drop occurred — no event
+        vanishes silently.
         """
         self._frontier = frontier
 
@@ -470,10 +491,15 @@ class StreamSession:
                          if s.n_overflow > 0)
         ing = None if self._frontier is None else self._frontier.stats()
         n_late = 0 if ing is None else ing.n_late_dropped
+        n_forced_gap = 0 if ing is None else ing.n_dropped_forced_gap
         drop_rate = 0.0 if ing is None else (
             n_late / max(1, n_late + ing.n_emitted))
-        health = DEGRADED if degraded or drop_rate > self.late_drop_threshold \
-            else ACTIVE
+        # forced-gap drops are capacity pressure (the reorder buffer
+        # force-evicted past the watermark): any amount degrades health —
+        # unlike user lateness, no threshold makes it acceptable
+        health = DEGRADED if degraded \
+            or drop_rate > self.late_drop_threshold \
+            or n_forced_gap > 0 else ACTIVE
         return SessionStatus(
             n_subscriptions=len(self._subs),
             n_edges_ingested=svc.n_edges_ingested,
@@ -484,6 +510,8 @@ class StreamSession:
             n_late_dropped=n_late,
             n_duplicates=0 if ing is None else ing.n_duplicates,
             n_reconnects=0 if ing is None else ing.n_reconnects,
+            n_dropped_forced_gap=n_forced_gap,
+            watermark=None if ing is None else ing.watermark,
             health=health,
         )
 

@@ -48,6 +48,12 @@ from repro.core.state import (
 
 I32 = jnp.int32
 
+# Traced "watermark unknown" sentinel for event-time ticks: composes as
+# the identity through ``max(t_now, min(watermark, max_batch_ts))``, so a
+# tick fed NO_WATERMARK behaves like the frozen/processing-time clock
+# without retracing (the watermark stays a traced scalar either way).
+NO_WATERMARK = int(np.iinfo(np.int32).min)
+
 
 class TickResult(NamedTuple):
     n_new_matches: jnp.ndarray     # int32 scalar
@@ -243,15 +249,41 @@ def build_tick_body(
         return tuple(new_levels), new_l0
 
     def body(state: EngineState, batch: EdgeBatch, ematch, window,
-             prefix_view=None):
+             prefix_view=None, watermark=None):
         # -- 0. advance time; clear last tick's fresh marks ------------ #
         # NOTE: expiry is deferred to the END of the tick.  Mid-tick, the
         # window-span predicate inside every join plays the role of the
         # paper's two-phase partial removal (§5.3): a row that expires at
         # some intra-tick time is still joinable by earlier-timestamped
         # batch edges and already invisible to later ones.
+        #
+        # ``watermark=None`` (a Python-static choice, one trace each) is
+        # the processing-time clock: t_now rides the max ts seen, so one
+        # out-of-order edge jumps the window for everyone.  With a traced
+        # ``watermark`` scalar (event-time mode, fed from the ingest
+        # frontier), edges at-or-below the already-released floor are
+        # rejected-and-counted before they can touch a table, and the
+        # clock advances to min(watermark, max batch ts): bounded above
+        # by the watermark so a force-evicted straggler cannot prematurely
+        # expire partials still inside ``allowed_lateness``, and by the
+        # batch max so release backlog (or an all-invalid batch — unarmed
+        # slots, inactive queries) keeps the clock frozen exactly as the
+        # sequential replay would.  INT32_MIN means "watermark unknown"
+        # and degrades to the frozen/processing clock through the same
+        # max/min composition — no branch on the traced value.
+        rejected = jnp.zeros((), I32)
+        if watermark is not None:
+            late = batch.valid & (batch.ts <= state.t_now - window)
+            rejected = jnp.sum(late, dtype=I32)
+            keep = batch.valid & ~late
+            batch = batch._replace(valid=keep)
+            ematch = ematch & keep[None, :]
         bt = jnp.where(batch.valid, batch.ts, jnp.iinfo(jnp.int32).min)
-        t_now = jnp.maximum(state.t_now, jnp.max(bt))
+        if watermark is None:
+            t_now = jnp.maximum(state.t_now, jnp.max(bt))
+        else:
+            t_now = jnp.maximum(
+                state.t_now, jnp.minimum(watermark, jnp.max(bt)))
         levels = tuple(
             tuple(t._replace(fresh=jnp.zeros_like(t.fresh)) for t in sub)
             for sub in state.levels
@@ -423,6 +455,7 @@ def build_tick_body(
             n_edges_processed=state.stats.n_edges_processed
             + jnp.sum(batch.valid, dtype=I32),
             n_edges_discarded=state.stats.n_edges_discarded + n_discard,
+            n_edges_rejected=state.stats.n_edges_rejected + rejected,
         )
         new_state = EngineState(levels=levels, l0=l0, t_now=t_now, stats=stats)
         return new_state, TickResult(n_new, n_overflow, mb, me, mv)
@@ -472,8 +505,9 @@ def build_tick(
     eel = jnp.asarray(plan.edge_edge_label)
     window = plan.window
 
-    def tick(state: EngineState, batch: EdgeBatch):
-        return body(state, batch, edge_match_mask(batch, esl, edl, eel), window)
+    def tick(state: EngineState, batch: EdgeBatch, watermark=None):
+        return body(state, batch, edge_match_mask(batch, esl, edl, eel),
+                    window, watermark=watermark)
 
     return tick
 

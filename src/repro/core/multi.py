@@ -129,16 +129,20 @@ def build_multi_tick(
     offsets = np.cumsum([0] + [p.query.n_edges for p in plans])
     windows = [p.window for p in plans]
 
-    def tick(mstate: MultiEngineState, batch: EdgeBatch):
+    def tick(mstate: MultiEngineState, batch: EdgeBatch, watermark=None):
         em_all = edge_match_mask(batch, esl, edl, eel)
         states, results = [], []
         for qi, body in enumerate(bodies):
             # an inactive query sees an all-invalid batch: no appends, no
-            # stats drift (edges processed/discarded), frozen t_now
+            # stats drift (edges processed/discarded), frozen t_now —
+            # which the watermark clock preserves by construction: an
+            # all-invalid batch has max batch ts = INT32_MIN, and
+            # min(watermark, that) never advances t_now
             act = mstate.active[qi]
             b_q = batch._replace(valid=batch.valid & act)
             em = em_all[offsets[qi]:offsets[qi + 1]] & act
-            s, r = body(mstate.queries[qi], b_q, em, windows[qi])
+            s, r = body(mstate.queries[qi], b_q, em, windows[qi],
+                        watermark=watermark)
             states.append(s)
             results.append(r)
         return mstate._replace(queries=tuple(states)), tuple(results)
@@ -256,34 +260,49 @@ def build_slot_tick(
     table view (vmap-broadcast), and the per-slot bodies run only the
     suffix joins.  Results and stats of unarmed slots are masked — the
     shared view is nonzero input even for slots that hold no tenant.
+
+    Both variants accept a trailing ``watermark=None``: ``None`` keeps
+    the legacy max-ts clock, a traced int32 scalar switches every slot
+    to event-time admission/expiry (``repro.core.engine.NO_WATERMARK``
+    is the traced "unknown" sentinel).  The watermark is vmap-broadcast;
+    unarmed slots stay frozen because their all-invalid batch caps the
+    clock advance at INT32_MIN.
     """
     body = build_tick_body(template_plan, backend=backend,
                            extract_matches=extract_matches, max_out=max_out,
                            prefix_depth=prefix_depth)
 
     if prefix_depth == 0:
-        def one(engine, batch, esl, edl, eel, window, active):
+        def one(engine, batch, esl, edl, eel, window, active, watermark):
             # unarmed slots see an all-invalid batch (no stats drift,
-            # frozen t_now) in addition to the zeroed match mask
+            # frozen t_now) in addition to the zeroed match mask; the
+            # watermark clock keeps the freeze for free — an all-invalid
+            # batch's max ts is INT32_MIN and min(watermark, ·) cannot
+            # advance t_now, so no per-slot watermark masking is needed
             b_s = batch._replace(valid=batch.valid & active)
             em = edge_match_mask(b_s, esl, edl, eel) & active
-            return body(engine, b_s, em, window)
+            return body(engine, b_s, em, window, watermark=watermark)
 
-        vbody = jax.vmap(one, in_axes=(0, None, 0, 0, 0, 0, 0))
+        # a None watermark is an empty pytree, so the broadcast in_axes
+        # serves both the legacy (None) and event-time (scalar) modes —
+        # jit retraces once per mode, never per value
+        vbody = jax.vmap(one, in_axes=(0, None, 0, 0, 0, 0, 0, None))
 
-        def tick(sstate: SlotState, batch: EdgeBatch):
+        def tick(sstate: SlotState, batch: EdgeBatch, watermark=None):
             p = sstate.params
             engines, results = vbody(
                 sstate.engines, batch, p.esl, p.edl, p.eel, p.window,
-                p.active)
+                p.active, watermark)
             return sstate._replace(engines=engines), results
 
         return tick
 
-    def one(engine, batch, esl, edl, eel, window, active, prefix_view):
+    def one(engine, batch, esl, edl, eel, window, active, prefix_view,
+            watermark):
         b_s = batch._replace(valid=batch.valid & active)
         em = edge_match_mask(b_s, esl, edl, eel) & active
-        s, r = body(engine, b_s, em, window, prefix_view)
+        s, r = body(engine, b_s, em, window, prefix_view,
+                    watermark=watermark)
         # a fully-shared subquery 0 feeds every slot the shared rows, so
         # unarmed slots must mask their outputs AND their stats (the
         # zeroed batch alone no longer freezes them)
@@ -296,13 +315,14 @@ def build_slot_tick(
             match_valid=r.match_valid & active)
         return s, r
 
-    vbody = jax.vmap(one, in_axes=(0, None, 0, 0, 0, 0, 0, None))
+    vbody = jax.vmap(one, in_axes=(0, None, 0, 0, 0, 0, 0, None, None))
 
-    def tick(sstate: SlotState, batch: EdgeBatch, prefix_view):
+    def tick(sstate: SlotState, batch: EdgeBatch, prefix_view,
+             watermark=None):
         p = sstate.params
         engines, results = vbody(
-            sstate.engines, batch, p.esl, p.edl, p.eel, p.window, p.active,
-            prefix_view)
+            sstate.engines, batch, p.esl, p.edl, p.eel, p.window,
+            p.active, prefix_view, watermark)
         return sstate._replace(engines=engines), results
 
     return tick

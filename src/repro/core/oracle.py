@@ -119,9 +119,26 @@ class OracleEngine:
         self.window = window
         self.edges: list[DataEdge] = []
         self.t_now = 0
+        self.n_rejected = 0
 
-    def insert(self, e: DataEdge):
-        self.t_now = max(self.t_now, e.ts)
+    def insert(self, e: DataEdge, watermark: int | None = None):
+        """Insert one edge; slide the window.
+
+        ``watermark=None`` is the processing-time clock (max ts seen).
+        With a watermark (event-time replay, mirroring the engine's
+        watermark mode): an edge at-or-below the already-released floor
+        is rejected-and-counted before the clock moves, and the clock
+        advances to ``min(watermark, e.ts)`` — bounded by the watermark
+        so a force-evicted straggler cannot prematurely expire partials
+        still inside ``allowed_lateness``.
+        """
+        if watermark is not None:
+            if e.ts <= self.t_now - self.window:
+                self.n_rejected += 1
+                return
+            self.t_now = max(self.t_now, min(watermark, e.ts))
+        else:
+            self.t_now = max(self.t_now, e.ts)
         lo = self.t_now - self.window
         self.edges = [x for x in self.edges if x.ts > lo]
         if e.ts > lo:

@@ -183,8 +183,9 @@ def init_node_state(spec: NodeSpec) -> NodeState:
 def build_node_tick(spec: NodeSpec, backend: str = J.JoinBackend.REF):
     """Compile the per-tick advance of one prefix node.
 
-    Root:   ``tick(state, batch, esl, edl, eel, window)``
-    Child:  ``tick(state, batch, parent_view, esl, edl, eel, window)``
+    Root:   ``tick(state, batch, esl, edl, eel, window, watermark=None)``
+    Child:  ``tick(state, batch, parent_view, esl, edl, eel, window,
+    watermark=None)``
 
     Both return ``(state, NodeView, n_overflow_this_tick)``.  The label
     scalars and the window are runtime inputs (same contract as the slot
@@ -196,17 +197,32 @@ def build_node_tick(spec: NodeSpec, backend: str = J.JoinBackend.REF):
     from the parent's post-expiry validity.
     """
 
-    def _advance_time(state, batch):
+    def _advance_time(state, batch, window, watermark):
+        # event-time mode (traced watermark): reject at-or-below the
+        # already-released floor before the clock moves, then advance to
+        # min(watermark, max batch ts) — the same clock rule as
+        # ``build_tick_body``, so a shared prefix table expires in
+        # lockstep with its tenants' suffix tables.  Tenants count their
+        # own rejections; the node only masks.
+        if watermark is not None:
+            late = batch.valid & (batch.ts <= state.t_now - window)
+            batch = batch._replace(valid=batch.valid & ~late)
         bt = jnp.where(batch.valid, batch.ts, jnp.iinfo(jnp.int32).min)
-        t_now = jnp.maximum(state.t_now, jnp.max(bt))
+        if watermark is None:
+            t_now = jnp.maximum(state.t_now, jnp.max(bt))
+        else:
+            t_now = jnp.maximum(
+                state.t_now, jnp.minimum(watermark, jnp.max(bt)))
         table = state.table._replace(
             fresh=jnp.zeros_like(state.table.fresh))
-        return t_now, table
+        return t_now, table, batch
 
     if spec.parent_ne == 0:                      # depth-1 root
-        def tick(state: NodeState, batch, esl, edl, eel, window):
+        def tick(state: NodeState, batch, esl, edl, eel, window,
+                 watermark=None):
+            t_now, table, batch = _advance_time(state, batch, window,
+                                                watermark)
             em = edge_match_mask(batch, esl[None], edl[None], eel[None])[0]
-            t_now, table = _advance_time(state, batch)
             table, nd = _append_level(
                 table, jnp.full_like(batch.src, -1),
                 batch.src, batch.dst, batch.ts, em)
@@ -228,9 +244,9 @@ def build_node_tick(spec: NodeSpec, backend: str = J.JoinBackend.REF):
     trel[-1, 0] = -1                             # ≺-chain: last edge only
 
     def tick(state: NodeState, batch, parent: NodeView, esl, edl, eel,
-             window):
+             window, watermark=None):
+        t_now, table, batch = _advance_time(state, batch, window, watermark)
         em = edge_match_mask(batch, esl[None], edl[None], eel[None])[0]
-        t_now, table = _advance_time(state, batch)
         bbind = jnp.stack([batch.src, batch.dst], axis=1)
         bets = batch.ts[:, None]
         a_idx, b_idx, pv, nd1 = J.join_pairs(
@@ -394,13 +410,16 @@ class SharedPrefixForest:
         return leaf
 
     # ------------------------------------------------------------------ #
-    def advance(self, batch):
+    def advance(self, batch, watermark=None):
         """One dedicated prefix tick: advance every node once, in depth
         order (parents before children).  Returns the per-node views and
         the per-node overflow scalars keyed by pid (device; the service
         attributes each tenant's chain overflow back onto its
         ``TickResult`` so results match the unshared engine's counters
-        exactly)."""
+        exactly).  ``watermark`` (None or a traced int32 scalar) selects
+        the same clock mode the tenants' slot ticks run under — the
+        service passes one value to both, keeping node and suffix expiry
+        in lockstep."""
         views: dict[int, NodeView] = {}
         nds: dict[int, jnp.ndarray] = {}
         for node in sorted(self._by_key.values(),
@@ -408,11 +427,11 @@ class SharedPrefixForest:
             if node.parent is None:
                 node.state, view, nd = node.tick(
                     node.state, batch, node.esl, node.edl, node.eel,
-                    node.window)
+                    node.window, watermark)
             else:
                 node.state, view, nd = node.tick(
                     node.state, batch, views[node.parent.pid],
-                    node.esl, node.edl, node.eel, node.window)
+                    node.esl, node.edl, node.eel, node.window, watermark)
             views[node.pid] = view
             nds[node.pid] = nd
         return views, nds

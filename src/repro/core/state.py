@@ -56,6 +56,8 @@ class EngineStats(NamedTuple):
     n_overflow: jnp.ndarray         # int32 scalar: dropped appends (capacity)
     n_edges_processed: jnp.ndarray  # int32 scalar
     n_edges_discarded: jnp.ndarray  # int32 scalar: matched no query edge / pruned
+    n_edges_rejected: jnp.ndarray   # int32 scalar: at-or-below the released
+    #                                 event-time floor (watermark mode only)
 
 
 class EngineState(NamedTuple):
@@ -86,11 +88,19 @@ def _empty_l0(capacity: int, nv: int, ne: int) -> L0Table:
     )
 
 
-def init_state(plan: ExecutionPlan, prefix_depth: int = 0) -> EngineState:
+def init_state(plan: ExecutionPlan, prefix_depth: int = 0,
+               watermark: int | None = None) -> EngineState:
     """Empty tables for ``plan``.  With ``prefix_depth > 0`` (cross-tenant
     prefix sharing, ``repro.core.share``), subquery 0's first that-many
     levels live in a shared prefix table owned by the forest, so the
-    per-tenant state holds only the suffix levels."""
+    per-tenant state holds only the suffix levels.
+
+    ``watermark`` seeds the engine clock ``t_now``: a tenant registered
+    mid-stream under event-time serving starts at the already-released
+    floor instead of 0, so it can never admit an edge the frontier has
+    already released past (no resurrection after crash/restore either —
+    the service seeds restored-but-stateless engines the same way).
+    """
     levels = tuple(
         tuple(_empty_level(lv.capacity)
               for lv in s.levels[(prefix_depth if si == 0 else 0):])
@@ -101,11 +111,13 @@ def init_state(plan: ExecutionPlan, prefix_depth: int = 0) -> EngineState:
         for js in plan.l0_joins
     )
     zero = jnp.zeros((), I32)
+    t0 = jnp.zeros((), I32) if watermark is None \
+        else jnp.asarray(watermark, I32)
     return EngineState(
         levels=levels,
         l0=l0,
-        t_now=jnp.zeros((), I32),
-        stats=EngineStats(zero, zero, zero, zero),
+        t_now=t0,
+        stats=EngineStats(zero, zero, zero, zero, zero),
     )
 
 

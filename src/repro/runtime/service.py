@@ -129,6 +129,7 @@ from repro.core.share import (
     SharedPrefixInfo,
     shared_current_matches,
 )
+from repro.core.engine import NO_WATERMARK
 from repro.core.state import EdgeBatch, EngineState, init_state, make_batch
 from repro.runtime.straggler import TickCoalescer, quantize_pow2
 from repro.stream.generator import to_batches
@@ -152,6 +153,9 @@ class ServeInfo(NamedTuple):
     n_late_dropped: int = 0          # frontier late drops this tick
     n_duplicates: int = 0            # suppressed duplicate deliveries, tick
     n_reconnects: int = 0            # source reconnects this tick
+    n_dropped_forced_gap: int = 0    # capacity-pressure drops this tick
+    watermark_lag: int = 0           # freshest data ts − watermark
+    window_staleness: int = 0        # emit floor − watermark (forced gap)
 
 
 @dataclass(eq=False)       # identity semantics: fields hold device arrays
@@ -396,17 +400,17 @@ class ContinuousSearchService:
         return dropped
 
     # ------------------------------------------------------------------ #
-    def _advance_forest(self, batch: EdgeBatch):
+    def _advance_forest(self, batch: EdgeBatch, watermark=None):
         """The dedicated prefix tick: every live forest node advances
         once per service tick, no matter how many tenants alias it.
         Returns the per-node views consumed by the groups' suffix ticks
         plus the nodes' per-tick overflow scalars by pid (device)."""
         if self.forest is None or not len(self.forest):
             return {}, {}
-        return self.forest.advance(batch)
+        return self.forest.advance(batch, watermark)
 
     def _advance_group(self, g: _Group, batch: EdgeBatch, views=None,
-                       forest_nds=None):
+                       forest_nds=None, watermark=None):
         """One fused tick for one group.  With ``donate`` the previous
         sstate buffers are consumed — ``g.sstate`` is rebound before this
         returns, so no caller can observe the donated state.
@@ -415,32 +419,42 @@ class ContinuousSearchService:
         ``n_overflow`` raised by its chain's drops this tick: the shared
         table drops on behalf of every aliasing tenant, and per-tenant
         counters must read as the unshared engine's would.
+
+        ``watermark`` (None or a traced int32 scalar) is handed straight
+        to the slot tick: one value per service tick drives every
+        tenant's event-time clock (``serve_frontier`` feeds the
+        frontier's watermark; the offline paths pass None and keep the
+        legacy max-ts clock).
         """
         if g.prefix is not None:
-            g.sstate, res = g.tick(g.sstate, batch, views[g.prefix.pid])
+            g.sstate, res = g.tick(g.sstate, batch, views[g.prefix.pid],
+                                   watermark)
             chain_nd = self.forest.chain_tick_overflow(g.prefix, forest_nds)
             res = res._replace(
                 n_overflow=res.n_overflow
                 + jnp.where(g.sstate.params.active, chain_nd, 0))
         else:
-            g.sstate, res = g.tick(g.sstate, batch)
+            g.sstate, res = g.tick(g.sstate, batch, watermark)
         return res
 
-    def ingest(self, batch) -> dict[int, TickResult]:
+    def ingest(self, batch, watermark=None) -> dict[int, TickResult]:
         """Advance all standing queries by one batch of stream edges.
 
         ``batch`` is an EdgeBatch or a dict of arrays (``to_batches``
         output).  Returns a per-qid TickResult (unstacked views of each
-        group's fused result).
+        group's fused result).  ``watermark`` switches the engines to
+        event-time admission/expiry (see ``repro.core.engine``); None
+        keeps the legacy max-ts clock.
         """
         if not isinstance(batch, EdgeBatch):
             batch = make_batch(**batch)
-        views, forest_nds = self._advance_forest(batch)
+        views, forest_nds = self._advance_forest(batch, watermark)
         out: dict[int, TickResult] = {}
         for g in self._iter_groups():
             if g.idle:
                 continue
-            res = self._advance_group(g, batch, views, forest_nds)
+            res = self._advance_group(g, batch, views, forest_nds,
+                                      watermark)
             for k, qid in enumerate(g.qids):
                 if qid is not None:
                     out[qid] = jax.tree.map(lambda x, k=k: x[k], res)
@@ -528,20 +542,22 @@ class ContinuousSearchService:
         self._final_checkpoint(ckpt_every, final_checkpoint)
         return totals
 
-    def _tick_chunk(self, chunk: list, on_match, totals: dict
-                    ) -> tuple[float, int, int]:
+    def _tick_chunk(self, chunk: list, on_match, totals: dict,
+                    watermark=None) -> tuple[float, int, int]:
         """One production tick over ``chunk`` (a DataEdge list): pow-2
         padded batch, async group dispatch, ONE barrier, match delivery.
         Updates ``totals``/counters in place; returns (barrier latency
         ms, tick overflow, shared-prefix node count).  Shared by
-        ``serve_stream`` (arrival-order chunks) and ``serve_frontier``
-        (watermark-order chunks)."""
+        ``serve_stream`` (arrival-order chunks, ``watermark=None``) and
+        ``serve_frontier`` (watermark-order chunks with the frontier's
+        traced event-time watermark)."""
         active = [g for g in self._iter_groups() if not g.idle]
         batch = make_batch(
             **to_batches(chunk, quantize_pow2(len(chunk)))[0])
         t0 = time.perf_counter()
-        views, forest_nds = self._advance_forest(batch)
-        results = [(g, self._advance_group(g, batch, views, forest_nds))
+        views, forest_nds = self._advance_forest(batch, watermark)
+        results = [(g, self._advance_group(g, batch, views, forest_nds,
+                                           watermark))
                    for g in active]
         jax.block_until_ready(                              # the barrier
             [g.sstate for g in active]
@@ -605,13 +621,27 @@ class ContinuousSearchService:
         ``restored_ingest`` and ``IngestFrontier.resume`` picks the
         stream back up exactly-once (replayed deliveries suppressed).
 
-        ``ServeInfo`` gains the frontier fields: ``watermark`` and the
-        per-tick ``n_late_dropped`` / ``n_duplicates`` /
-        ``n_reconnects`` deltas — no event leaves the pipeline
-        unaccounted.  ``max_idle_rounds`` bounds how many consecutive
-        empty rounds to tolerate before returning (None: serve until
-        every source is exhausted); the frontier stays resumable either
-        way.  Returns ``{qid: total new matches}``.
+        Event-time end-to-end: each tick hands the frontier's
+        ``watermark()`` to every engine as a traced scalar, so window
+        admission and expiry follow EVENT time (what the sources
+        produced) instead of processing order (what the reorder buffer
+        happened to release) — a force-evicted straggler can no longer
+        jump the window clock and prematurely expire every tenant's
+        partials; ``allowed_lateness`` trades completeness against
+        window staleness end-to-end.  The watermark rides in every
+        checkpoint manifest, so a restored frontier + service resume the
+        same clock (no re-expiry, no resurrection).
+
+        ``ServeInfo`` gains the frontier fields: ``watermark``,
+        ``watermark_lag`` / ``window_staleness`` gauges, and the
+        per-tick ``n_late_dropped`` / ``n_dropped_forced_gap`` /
+        ``n_duplicates`` / ``n_reconnects`` deltas — no event leaves the
+        pipeline unaccounted.  ``max_idle_rounds`` bounds how many
+        consecutive empty rounds to tolerate before returning (None:
+        serve until every source is exhausted — a source whose retry
+        budget is spent counts as exhausted, so a dead source can't spin
+        this loop forever); the frontier stays resumable either way.
+        Returns ``{qid: total new matches}``.
         """
         if on_match is not None and not self.extract_matches:
             raise ValueError(
@@ -640,8 +670,15 @@ class ContinuousSearchService:
                     break
                 continue
             idle = 0
+            # the frontier's event-time watermark drives every engine's
+            # admission/expiry clock this tick.  Traced scalar (one jit
+            # specialization for the whole event-time mode, not one per
+            # value); NO_WATERMARK is the traced "unknown yet" identity.
+            wm = frontier.watermark()
+            wm_in = jnp.asarray(
+                NO_WATERMARK if wm is None else wm, jnp.int32)
             lat_ms, tick_overflow, n_shared = self._tick_chunk(
-                chunk, on_match, totals)
+                chunk, on_match, totals, wm_in)
             coalescer.record(lat_ms, frontier.buffered, tick_overflow)
             if self.ckpt and ckpt_every and \
                     self.n_ticks % ckpt_every == 0:
@@ -660,6 +697,10 @@ class ContinuousSearchService:
                     - prev.n_late_dropped,
                     n_duplicates=cur.n_duplicates - prev.n_duplicates,
                     n_reconnects=cur.n_reconnects - prev.n_reconnects,
+                    n_dropped_forced_gap=cur.n_dropped_forced_gap
+                    - prev.n_dropped_forced_gap,
+                    watermark_lag=cur.watermark_lag,
+                    window_staleness=cur.window_staleness,
                 ))
                 prev = cur
         self._final_checkpoint(ckpt_every, final_checkpoint)

@@ -42,8 +42,8 @@ the paper assumes:
 ``merge_event_streams`` is the offline k-way merge over already-ordered
 lists (the same tie-break ladder, property-tested in
 tests/test_ingest_merge.py).  ``CallbackRegistry`` is the subscription
-surface: ``frontier.on("event" | "drop_late" | "duplicate" |
-"reconnect" | "stall", fn)``.
+surface: ``frontier.on("event" | "drop_late" | "drop_forced_gap" |
+"duplicate" | "reconnect" | "stall", fn)``.
 
 Everything here is host-side, deterministic Python: time and sleep are
 injectable, jitter draws from a seeded rng, and the chaos harness
@@ -178,14 +178,17 @@ class CallbackRegistry:
     """Subscription registry for ingest lifecycle events.
 
     Kinds: ``event`` (one emitted DataEdge), ``drop_late`` (source name,
-    edge, seq), ``duplicate`` (source name, seq), ``reconnect`` (source
-    name, attempt, delay_s), ``stall`` (source name, rounds),
-    ``watermark`` (new watermark).  Unknown kinds are rejected loudly —
-    a typo'd subscription must not become a silent no-listener.
+    edge, seq), ``drop_forced_gap`` (source name, edge, seq: dropped
+    because forced evictions advanced the emit floor past the watermark
+    — capacity pressure, not user-visible lateness), ``duplicate``
+    (source name, seq), ``reconnect`` (source name, attempt, delay_s),
+    ``stall`` (source name, rounds), ``watermark`` (new watermark).
+    Unknown kinds are rejected loudly — a typo'd subscription must not
+    become a silent no-listener.
     """
 
-    KINDS = ("event", "drop_late", "duplicate", "reconnect", "stall",
-             "watermark")
+    KINDS = ("event", "drop_late", "drop_forced_gap", "duplicate",
+             "reconnect", "stall", "watermark")
 
     def __init__(self):
         self._subs: dict[str, list[Callable]] = {k: [] for k in self.KINDS}
@@ -289,7 +292,13 @@ class SourceAdapter:
 
     @property
     def exhausted(self) -> bool:
-        return self.state == EXHAUSTED or (
+        # FAILED is terminal for exhaustion: the retry budget is spent
+        # and this adapter will never produce again, so it must not hold
+        # ``IngestFrontier.exhausted`` open forever (a caller that
+        # swallowed the IngestError and kept serving would busy-loop on
+        # empty rounds).  It stays loud in ``stats()`` via its state and
+        # ``n_failed_sources``.
+        return self.state in (EXHAUSTED, FAILED) or (
             self.state == CONNECTED and self.source.exhausted)
 
     def _connect(self, initial: bool = False) -> None:
@@ -402,6 +411,12 @@ def merge_event_streams(
     return [e for _, e in heap]
 
 
+# Internal "every source is done: drain the buffer" release bound.  Big
+# enough that every real event timestamp is at-or-below it; it never
+# leaves the frontier (``watermark()`` surfaces real timestamps or None).
+_DRAIN = 2 ** 63 - 1
+
+
 class IngestFrontier:
     """K-way event-time merge + watermarked reorder buffer over N
     fault-wrapped sources; the producer side of
@@ -468,13 +483,21 @@ class IngestFrontier:
         self.emit_floor: int | None = None
         self.n_emitted = 0
         self.n_late_dropped = 0
+        self.n_dropped_forced_gap = 0
         self.n_forced = 0
         self.n_stalled_rounds = 0
+        # monotone event-time watermark floor: the highest finite release
+        # bound ever observed (persisted in the manifest, so a restored
+        # frontier's clock can never regress below the checkpoint's)
+        self._wm_floor: int | None = None
         if _resume is not None:
             self.emit_floor = _resume.get("emit_floor")
+            self._wm_floor = _resume.get("watermark")
             c = _resume.get("counters", {})
             self.n_emitted = int(c.get("n_emitted", 0))
             self.n_late_dropped = int(c.get("n_late_dropped", 0))
+            self.n_dropped_forced_gap = int(
+                c.get("n_dropped_forced_gap", 0))
             self.n_forced = int(c.get("n_forced", 0))
 
     # ------------------------------------------------------------------ #
@@ -496,7 +519,7 @@ class IngestFrontier:
         the new deliveries.  Returns how many entered the buffer."""
         n_in = 0
         for si, a in enumerate(self.adapters):
-            if a.exhausted or a.state == FAILED:
+            if a.exhausted:                # includes terminal FAILED
                 continue
             evs = a.pull(max_per_source)
             if not evs and a.stall_rounds == self.stall_patience + 1:
@@ -512,25 +535,37 @@ class IngestFrontier:
                         "(strict_event_time_monotonic)")
                 a.last_ts = ev.ts
                 if self.emit_floor is not None and ev.ts < self.emit_floor:
-                    # later than the allowed lateness: the merged stream
-                    # already advanced past this event time.  Dropped,
-                    # counted, acked (accounted-for = consumed).
-                    self.n_late_dropped += 1
+                    # the merged stream already advanced past this event
+                    # time.  Dropped, counted, acked (accounted-for =
+                    # consumed) — but attributed by CAUSE: at-or-below
+                    # the watermark means the event really arrived later
+                    # than the allowed lateness; above it means forced
+                    # evictions (reorder-buffer capacity) advanced the
+                    # emit floor past the watermark, which is capacity
+                    # pressure, not user-visible lateness.
+                    wm = self.watermark()
+                    if wm is not None and ev.ts <= wm:
+                        self.n_late_dropped += 1
+                        kind = "drop_late"
+                    else:
+                        self.n_dropped_forced_gap += 1
+                        kind = "drop_forced_gap"
                     a.ack(ev.seq)
-                    self.callbacks.emit("drop_late", a.name, ev.edge, ev.seq)
+                    self.callbacks.emit(kind, a.name, ev.edge, ev.seq)
                     continue
                 heapq.heappush(self._heap, (_ladder_key(ev, si), si, ev))
                 n_in += 1
         return n_in
 
-    def watermark(self) -> int | None:
-        """Min over live (non-exhausted, non-stalled-out) sources of the
-        max event time seen, minus the allowed lateness.  None while any
-        live source has produced nothing yet (nothing is safe to emit);
-        +inf-like (None from no live sources) drains the buffer."""
+    def _release_bound(self) -> int | None:
+        """Internal release gate for ``take_ready``: min over live
+        (non-exhausted, non-stalled-out) sources of the max event time
+        seen, minus the allowed lateness.  None while any live source has
+        produced nothing yet (nothing is safe to emit); the ``_DRAIN``
+        sentinel when no live source remains (drain the buffer)."""
         highs = []
         for a in self.adapters:
-            if a.exhausted or a.state == FAILED:
+            if a.exhausted:
                 continue
             if a.stall_rounds > self.stall_patience:
                 continue      # stalled out: stops holding the line back
@@ -538,14 +573,32 @@ class IngestFrontier:
                 return None   # a live source with no data yet: hold all
             highs.append(a.high)
         if not highs:
-            return (2 ** 63 - 1)          # every source done: drain
+            return _DRAIN                 # every source done: drain
         return min(highs) - self.allowed_lateness
+
+    def watermark(self) -> int | None:
+        """The frontier's event-time watermark: a monotone, None-safe
+        clock for stats, health hooks, and the engine's event-time tick
+        input.  ``None`` until any release bound is known; thereafter the
+        highest finite release bound observed — and, once every source
+        is done, the emit floor (all events released ⇒ event time has
+        advanced to everything emitted).  Never the internal ``_DRAIN``
+        sentinel: downstream consumers see real event timestamps only.
+        """
+        b = self._release_bound()
+        if b is not None and b != _DRAIN:
+            if self._wm_floor is None or b > self._wm_floor:
+                self._wm_floor = b
+        elif b == _DRAIN and self.emit_floor is not None:
+            if self._wm_floor is None or self.emit_floor > self._wm_floor:
+                self._wm_floor = self.emit_floor
+        return self._wm_floor
 
     def take_ready(self, limit: int | None = None) -> list[DataEdge]:
         """Pop emit-ready events in merged order: everything at or below
-        the watermark, plus forced evictions while the buffer exceeds
+        the release bound, plus forced evictions while the buffer exceeds
         ``reorder_capacity``.  Advances the emit floor; acks each."""
-        wm = self.watermark()
+        wm = self._release_bound()
         out: list[DataEdge] = []
         while self._heap and (limit is None or len(out) < limit):
             key, si, ev = self._heap[0]
@@ -571,17 +624,30 @@ class IngestFrontier:
 
     # ------------------------------------------------------------------ #
     def stats(self) -> IngestStats:
+        wm = self.watermark()
+        highs = [a.high for a in self.adapters if a.high is not None]
         return IngestStats(
             n_sources=len(self.adapters),
+            n_failed_sources=sum(
+                1 for a in self.adapters if a.state == FAILED),
             n_emitted=self.n_emitted,
             n_late_dropped=self.n_late_dropped,
+            n_dropped_forced_gap=self.n_dropped_forced_gap,
             n_duplicates=sum(a.n_duplicates for a in self.adapters),
             n_reconnects=sum(a.n_reconnects for a in self.adapters),
             n_retries=sum(a.n_retries for a in self.adapters),
             n_forced=self.n_forced,
             n_stalled_rounds=self.n_stalled_rounds,
             buffered=len(self._heap),
-            watermark=self.watermark(),
+            watermark=wm,
+            # how far the freshest data runs ahead of the watermark
+            # (reorder/lateness slack held back by the slowest source)
+            watermark_lag=(max(highs) - wm)
+            if highs and wm is not None else 0,
+            # how far forced evictions pushed releases past the
+            # watermark (capacity pressure; 0 in healthy operation)
+            window_staleness=max(0, self.emit_floor - wm)
+            if wm is not None and self.emit_floor is not None else 0,
             emit_floor=self.emit_floor,
             by_source={a.name: {
                 "state": a.state, "n_events": a.n_events,
@@ -605,9 +671,14 @@ class IngestFrontier:
                 for a in self.adapters
             ],
             "emit_floor": self.emit_floor,
+            # the event-time clock rides in the checkpoint so a restored
+            # frontier (and the engines it feeds) can never regress below
+            # the released floor — no re-expiry, no resurrection
+            "watermark": self.watermark(),
             "counters": {
                 "n_emitted": int(self.n_emitted),
                 "n_late_dropped": int(self.n_late_dropped),
+                "n_dropped_forced_gap": int(self.n_dropped_forced_gap),
                 "n_forced": int(self.n_forced),
             },
         }

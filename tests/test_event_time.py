@@ -1,0 +1,474 @@
+"""Event-time window semantics: the watermark-driven engine clock.
+
+The bug this file pins down: the engine clock was pure processing time
+(``t_now = max(t_now, max batch ts)``), so one force-evicted straggler
+released by the ingestion frontier slammed the clock forward and expired
+window content that was still inside ``allowed_lateness`` — while the
+frontier's own bookkeeping (late drops, checkpoint cursors) ran on the
+watermark clock.  The fix threads the frontier watermark into the tick
+as a traced scalar:
+
+* clock:      ``t_now' = max(t_now, min(watermark, max batch ts))``
+* admission:  an edge at-or-below the released floor
+              (``ts <= t_now - window``, judged pre-advance) is
+              rejected-and-counted (``EngineStats.n_edges_rejected``),
+              never joined, never written to a table;
+* expiry:     unchanged, but keyed off the bounded clock.
+
+Proofs, on REF and PALLAS_INTERPRET:
+
+1. engine units — a straggler inside the lateness bound still joins
+   after a future-ts edge arrived first (the legacy max-ts clock
+   provably loses that match); a strictly-late edge is rejected,
+   counted, and never resurrects anything;
+2. hypothesis property — the engine under any frontier-produced release
+   order mirrors the event-time oracle replay edge-for-edge (matches
+   AND rejection counts), and when nothing is dropped the final match
+   set is invariant to the arrival permutation;
+3. the service differential — ``serve_frontier`` under chaos equals the
+   event-time oracle replay of the emitted stream *including expiry
+   decisions*, with ``Counter(emitted) + Counter(dropped) ==
+   Counter(stream)`` accounting;
+4. the satellite regressions — FAILED-source exhaustion (the
+   busy-loop deadlock), the drain-sentinel leak, forced-gap vs
+   late-drop attribution, and the watermark checkpoint round-trip.
+"""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compile_plan
+from repro.core.engine import NO_WATERMARK, build_tick, current_matches
+from repro.core.join import JoinBackend
+from repro.core.multi import SlotTickCache
+from repro.core.oracle import DataEdge, OracleEngine
+from repro.core.state import init_state, make_batch
+from repro.runtime.fault import RetryPolicy
+from repro.stream.generator import DisorderConfig, disordered_sources, \
+    to_batches
+from repro.stream.ingest import IngestError, IngestFrontier, ListSource, \
+    ScriptedSource, Source, SourceDisconnected
+
+from test_engine_oracle import small_stream
+from test_ingest_chaos import NO_SLEEP, QUERIES, RETRY, _chaos_sources, \
+    _fresh
+from test_service_restore import CAP, SERVE, EventLog, chain_query
+
+BACKENDS = [JoinBackend.REF, JoinBackend.PALLAS_INTERPRET]
+
+I32 = jnp.int32
+
+
+def edge(ts, src=0, dst=1, lab=0):
+    return DataEdge(src=src, dst=dst, ts=ts, src_label=0, dst_label=0,
+                    edge_label=lab)
+
+
+def c_edge(eid, src, dst, ts):
+    """An edge matching ``chain_query``'s query edge ``eid`` (vertex
+    labels run 0 -> 1 -> 2 along the chain)."""
+    return DataEdge(src=src, dst=dst, ts=ts, src_label=eid,
+                    dst_label=eid + 1, edge_label=0)
+
+
+def _ticker(backend, window=20):
+    plan = compile_plan(chain_query(), window, level_capacity=64,
+                        l0_capacity=64, max_new=64)
+    return plan, jax.jit(build_tick(plan, backend=backend))
+
+
+def _one(tick, state, e, watermark):
+    b = to_batches([e], 4)[0]
+    wm = None if watermark is None else jnp.asarray(watermark, I32)
+    return tick(state, make_batch(**b), wm)
+
+
+# --------------------------------------------------------------------- #
+# engine units: the clock-drift bugfix, admission, rejection accounting
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_watermark_bounds_clock_so_straggler_still_joins(backend):
+    """The fix itself: a future-ts edge (force-evicted past the
+    watermark) must NOT jump the window clock; a straggler inside the
+    lateness bound still finds its join partner.  The legacy max-ts
+    clock provably loses the match on the same traffic."""
+    plan, tick = _ticker(backend)
+    a = c_edge(0, 1, 2, ts=5)       # partial: chain edge 0
+    x = c_edge(0, 7, 8, ts=100)     # evicted straggler, far future ts
+    b = c_edge(1, 2, 3, ts=9)       # completes the chain with ``a``
+
+    # event-time run: watermark trails at 6..9 (allowed lateness)
+    st = init_state(plan)
+    st, _ = _one(tick, st, a, 5)
+    st, _ = _one(tick, st, x, 6)    # clock advances to 6, NOT 100
+    st, _ = _one(tick, st, b, 9)
+    assert len(current_matches(plan, st)) == 1
+    assert int(st.stats.n_edges_rejected) == 0
+
+    # same traffic on the legacy processing-time clock: ``x`` jumps the
+    # clock to 100, expires ``a``, and the match is lost — the drift bug
+    st = init_state(plan)
+    for e in (a, x, b):
+        st, _ = _one(tick, st, e, None)
+    assert current_matches(plan, st) == set()
+    assert int(st.stats.n_edges_rejected) == 0   # legacy mode never rejects
+
+    # oracle mirror of the event-time run
+    oracle = OracleEngine(chain_query(), 20)
+    for e, wm in ((a, 5), (x, 6), (b, 9)):
+        oracle.insert(e, watermark=wm)
+    assert len(oracle.matches()) == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_strictly_late_edge_rejected_counted_never_joined(backend):
+    """An edge at-or-below the released event-time floor is rejected
+    and counted BEFORE the clock moves — it never joins, never touches
+    a table; an edge inside the lateness bound on the same traffic does
+    join."""
+    plan, tick = _ticker(backend)
+    st = init_state(plan)
+    p = c_edge(0, 1, 2, ts=32)          # chain edge 0: the live partial
+    st, _ = _one(tick, st, p, 32)
+    # another edge-0 partial at ts=50 advances the clock: floor -> 30
+    st, _ = _one(tick, st, c_edge(0, 7, 8, ts=50), 50)
+    assert int(st.t_now) == 50
+
+    # strictly late (ts=25 <= 30): rejected, counted, clock unmoved.
+    # Same vertices as ``p`` — if it were wrongly admitted, the
+    # successor below would find TWO partials to complete.
+    st, res = _one(tick, st, c_edge(0, 1, 2, ts=25), 50)
+    assert int(res.n_new_matches) == 0
+    assert int(st.stats.n_edges_rejected) == 1
+    assert int(st.t_now) == 50              # rejection judged pre-advance
+
+    # in-window successor (ts=35 > 30): admitted, joins the still-live
+    # partial exactly once — the rejected edge never reached a table
+    st, res = _one(tick, st, c_edge(1, 2, 3, ts=35), 50)
+    assert int(res.n_new_matches) == 1
+    assert len(current_matches(plan, st)) == 1
+    assert int(st.stats.n_edges_rejected) == 1
+
+    # oracle mirrors every decision, including the rejection counter
+    oracle = OracleEngine(chain_query(), 20)
+    oracle.insert(p, watermark=32)
+    oracle.insert(c_edge(0, 7, 8, ts=50), watermark=50)
+    oracle.insert(c_edge(0, 1, 2, ts=25), watermark=50)
+    assert oracle.n_rejected == 1 and oracle.matches() == set()
+    oracle.insert(c_edge(1, 2, 3, ts=35), watermark=50)
+    assert oracle.n_rejected == 1 and len(oracle.matches()) == 1
+
+
+# --------------------------------------------------------------------- #
+# hypothesis: permutation invariance of watermark-driven expiry
+# --------------------------------------------------------------------- #
+_PROP_CACHE = {}
+
+
+def _prop_ticker():
+    if "tick" not in _PROP_CACHE:
+        plan = compile_plan(chain_query(), 20, level_capacity=128,
+                            l0_capacity=128, max_new=128)
+        _PROP_CACHE["plan"] = plan
+        _PROP_CACHE["tick"] = jax.jit(build_tick(plan))
+    return _PROP_CACHE["plan"], _PROP_CACHE["tick"]
+
+
+def _run_chunks(plan, tick, chunks):
+    """Drive the engine one tick per (edges, watermark) chunk, padded to
+    a fixed batch width (single trace)."""
+    state = init_state(plan)
+    rejected = 0
+    for edges, wm in chunks:
+        for b in to_batches(edges, 8):
+            state, _ = tick(state, make_batch(**b),
+                            jnp.asarray(NO_WATERMARK if wm is None else wm,
+                                        I32))
+        rejected = int(state.stats.n_edges_rejected)
+    assert int(state.stats.n_overflow) == 0
+    return state, rejected
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                             # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+def _check_reorder_invariance(raw, frac, delay, seed):
+    """The property: for any release order the frontier may legally
+    produce, the engine under the per-chunk watermark mirrors the
+    event-time oracle replay edge-for-edge (final matches AND rejection
+    counts), accounting reconciles every delivery, and when nothing is
+    dropped the final match set equals the canonically-ordered legacy
+    run."""
+    stream = sorted(
+        (c_edge(eid, s, d + 4, ts) for eid, s, d, ts in raw),
+        key=lambda e: (e.ts, e.src, e.dst, e.src_label))
+    scripts = disordered_sources(stream, DisorderConfig(
+        n_sources=2, disorder_frac=frac, max_delay=delay, seed=seed))
+    fr = IngestFrontier(
+        [ScriptedSource(f"s{i}", sc) for i, sc in enumerate(scripts)],
+        allowed_lateness=12, **NO_SLEEP)
+    dropped = []
+    fr.on("drop_late", lambda name, e, seq: dropped.append(e))
+    fr.on("drop_forced_gap", lambda name, e, seq: dropped.append(e))
+    chunks = []
+    while not fr.exhausted:
+        fr.pump()
+        got = fr.take_ready(limit=8)
+        while got:
+            chunks.append((got, fr.watermark()))
+            got = fr.take_ready(limit=8)
+    emitted = [e for es, _ in chunks for e in es]
+    assert Counter(emitted) + Counter(dropped) == Counter(stream)
+
+    plan, tick = _prop_ticker()
+    state, rejected = _run_chunks(plan, tick, chunks)
+
+    oracle = OracleEngine(chain_query(), 20)
+    for edges, wm in chunks:
+        for e in edges:
+            oracle.insert(e, watermark=wm)
+    assert current_matches(plan, state) == oracle.matches()
+    assert rejected == oracle.n_rejected
+
+    if not dropped:      # permutation invariance when everything arrives
+        ref = init_state(plan)
+        for b in to_batches(stream, 8):
+            ref, _ = tick(ref, make_batch(**b), None)
+        assert current_matches(plan, state) == current_matches(plan, ref)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=15)
+    @given(
+        raw=st.lists(
+            st.tuples(st.integers(0, 1),          # which chain edge
+                      st.integers(0, 3), st.integers(0, 3),  # vertices
+                      st.integers(0, 60)),        # event time
+            min_size=4, max_size=12),
+        frac=st.floats(0.0, 1.0),
+        delay=st.integers(0, 10),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_watermark_expiry_invariant_to_frontier_reorder(
+            raw, frac, delay, seed):
+        _check_reorder_invariance(raw, frac, delay, seed)
+
+
+def test_watermark_expiry_reorder_invariance_seeded():
+    """Deterministic sweep of the reorder-invariance property — always
+    runs; the hypothesis wrapper above widens the search when the
+    optional dev dependency is installed."""
+    rng = np.random.default_rng(5)
+    for seed in range(6):
+        raw = [(int(rng.integers(0, 2)), int(rng.integers(0, 4)),
+                int(rng.integers(0, 4)), int(rng.integers(0, 61)))
+               for _ in range(int(rng.integers(4, 13)))]
+        _check_reorder_invariance(
+            raw, float(rng.random()), int(rng.integers(0, 11)), seed)
+
+
+# --------------------------------------------------------------------- #
+# the service differential: serve_frontier == event-time oracle replay
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_serve_frontier_equals_event_time_oracle_replay(backend):
+    """Acceptance: under the chaos harness, ``serve_frontier`` produces
+    the exact oracle match set of the event-time replay of the emitted
+    stream — including expiry decisions — with every delivery emitted or
+    counted."""
+    tc = SlotTickCache()
+    stream = small_stream(120, n_vertices=9, seed=71)
+    fr = IngestFrontier(_chaos_sources(stream, seed=23),
+                        allowed_lateness=80, stall_patience=4,
+                        retry=RETRY, **NO_SLEEP)
+    emitted, dropped = [], []
+    fr.on("event", lambda e: emitted.append(e))
+    fr.on("drop_late", lambda name, e, seq: dropped.append(e))
+    fr.on("drop_forced_gap", lambda name, e, seq: dropped.append(e))
+
+    svc, qids = _fresh(backend, tc)
+    log = EventLog(svc)
+    infos = []
+    svc.serve_frontier(fr, on_match=log.on_match,
+                       on_tick=lambda i: (infos.append(i),
+                                          log.on_tick(i)), **SERVE)
+
+    assert Counter(emitted) + Counter(dropped) == Counter(stream)
+    assert fr.stats().n_late_dropped == 0     # lateness=80 covers disorder
+
+    # per-edge watermark = the watermark of the tick that consumed it
+    wm_per_edge, prev = [], 0
+    for i in infos:
+        wm_per_edge.extend([i.watermark] * (i.n_edges_ingested - prev))
+        prev = i.n_edges_ingested
+    assert len(wm_per_edge) == len(emitted)
+
+    for (q, window), qid in zip(QUERIES, qids):
+        oracle = OracleEngine(q, window)
+        for e, wm in zip(emitted, wm_per_edge):
+            oracle.insert(e, watermark=wm)
+        # expiry decisions included: the final windows agree exactly
+        assert svc.matches(qid) == oracle.matches()
+        assert oracle.n_rejected == 0
+
+
+# --------------------------------------------------------------------- #
+# satellite regressions
+# --------------------------------------------------------------------- #
+def test_failed_source_is_terminal_for_exhaustion():
+    """The busy-loop deadlock: a source whose retry budget is spent used
+    to hold ``exhausted`` open forever, spinning any caller that
+    swallowed the IngestError.  FAILED is now terminal-for-exhaustion
+    and loud in ``stats()``."""
+    class DeadSource(Source):
+        name = "dead"
+
+        def connect(self, resume_from=0):
+            pass
+
+        def poll(self, max_events=64):
+            raise SourceDisconnected("dead")
+
+    fr = IngestFrontier(
+        [ListSource("ok", [edge(1), edge(2), edge(3)]), DeadSource()],
+        retry=RetryPolicy(max_attempts=2, base_delay_s=0.0), **NO_SLEEP)
+    with pytest.raises(IngestError, match="retry budget exhausted"):
+        fr.drain()
+    # bounded loop: without the fix this never reaches exhaustion
+    out = []
+    for _ in range(50):
+        if fr.exhausted:
+            break
+        out.extend(fr.drain())
+    assert fr.exhausted, "FAILED source held the frontier open"
+    assert [e.ts for e in out] == [1, 2, 3]
+    s = fr.stats()
+    assert s.n_failed_sources == 1            # terminal, but never silent
+    assert s.by_source["dead"]["state"] == "failed"
+    assert s.watermark == 3                   # survivors still drained
+
+
+def test_watermark_never_surfaces_drain_sentinel():
+    """The sentinel leak: once every source drained, ``watermark()``
+    used to surface the internal ``2**63 - 1`` release bound.  It must
+    return real event timestamps (int32-safe) or None — never the
+    sentinel."""
+    fr = IngestFrontier([ListSource("a", [edge(3), edge(7)])], **NO_SLEEP)
+    assert fr.watermark() is None             # nothing observed yet
+    while not fr.exhausted:
+        fr.drain()
+    wm = fr.watermark()
+    assert wm == 7 != 2 ** 63 - 1
+    assert np.iinfo(np.int32).min <= wm <= np.iinfo(np.int32).max
+    assert fr.stats().watermark == 7
+    assert fr.to_manifest()["watermark"] == 7
+
+    # an empty stream drains to "no event time observed", not a sentinel
+    fr2 = IngestFrontier([ListSource("a", [])], **NO_SLEEP)
+    assert fr2.exhausted
+    assert fr2.watermark() is None
+    assert fr2.stats().watermark is None
+
+
+class _OpenSource(Source):
+    """A connected source that never produces and never exhausts."""
+
+    name = "open"
+
+    def connect(self, resume_from=0):
+        pass
+
+    def poll(self, max_events=64):
+        return []
+
+
+def _forced_gap_frontier(fr):
+    """Drive ``fr`` (script of 12 ordered events + one ancient straggler,
+    capacity 4) into a forced-eviction gap, then deliver the straggler."""
+    gap, late = [], []
+    fr.on("drop_forced_gap", lambda name, e, seq: gap.append(e))
+    fr.on("drop_late", lambda name, e, seq: late.append(e))
+    for _ in range(3):
+        fr.pump(max_per_source=4)             # buffer 12 ordered events
+    released = fr.take_ready()                # capacity 4: 8 forced out
+    fr.pump(max_per_source=4)                 # the ts=0 straggler arrives
+    return gap, late, released
+
+
+def test_forced_gap_drops_attributed_to_capacity_not_lateness():
+    """Misattribution fix: a drop caused by forced evictions advancing
+    the emit floor past the (unknown) watermark is capacity pressure,
+    not user-visible lateness — it must land in ``n_dropped_forced_gap``
+    and leave ``n_late_dropped`` untouched."""
+    script = [(i, edge(t)) for i, t in enumerate(range(12))] + \
+        [(12, edge(0))]
+    fr = IngestFrontier([ScriptedSource("full", script), _OpenSource()],
+                        reorder_capacity=4, stall_patience=10 ** 9,
+                        **NO_SLEEP)
+    gap, late, released = _forced_gap_frontier(fr)
+    assert len(released) == 12 - 4 and fr.stats().n_forced == 8
+    assert [e.ts for e in gap] == [0] and late == []
+    s = fr.stats()
+    assert s.n_dropped_forced_gap == 1 and s.n_late_dropped == 0
+    assert s.watermark is None                # cause: wm was never known
+    # accounting: every delivery emitted, buffered, or counted-dropped
+    assert s.n_emitted + s.n_dropped_forced_gap + s.buffered == 13
+    # the counter rides in the manifest
+    assert fr.to_manifest()["counters"]["n_dropped_forced_gap"] == 1
+
+
+def test_session_health_degrades_on_forced_gap_drops():
+    """End-to-end surfacing: ANY capacity-pressure drop turns
+    ``SessionStatus.health`` DEGRADED — unlike user lateness, no
+    threshold makes silently widening the gap acceptable."""
+    from repro.api import DEGRADED, StreamSession
+
+    script = [(i, edge(t)) for i, t in enumerate(range(12))] + \
+        [(12, edge(0))]
+    sess = StreamSession(slots_per_group=2, **CAP)
+    sess.register_query(chain_query(), 20)
+    fr = sess.sources(
+        {"full": ScriptedSource("full", script), "open": _OpenSource()},
+        reorder_capacity=4, stall_patience=10 ** 9, **NO_SLEEP)
+    _forced_gap_frontier(fr)
+    sess.serve_frontier(fr, batch_size=16, max_idle_rounds=2)
+    st = sess.status()
+    assert st.n_dropped_forced_gap == 1
+    assert st.n_late_dropped == 0             # not misattributed
+    assert st.health == DEGRADED
+
+
+def test_watermark_survives_manifest_roundtrip():
+    """The event-time clock rides in checkpoints: a restored frontier
+    resumes at (or above) the checkpointed watermark BEFORE any source
+    produces — no re-expiry, no resurrection — and the stream completes
+    exactly-once."""
+    stream = [edge(t) for t in range(8)]
+    fr = IngestFrontier([ListSource("a", stream)], allowed_lateness=2,
+                        **NO_SLEEP)
+    fr.pump(max_per_source=4)
+    got = fr.take_ready()                     # partial consumption
+    assert got and not fr.exhausted
+    man = fr.to_manifest()
+    assert man["watermark"] == fr.watermark() is not None
+
+    fr2 = IngestFrontier.resume(man, [ListSource("a", stream)],
+                                allowed_lateness=2, **NO_SLEEP)
+    # the clock survives the restart even before the first pump
+    assert fr2.watermark() == man["watermark"]
+    rest = []
+    while not fr2.exhausted:
+        rest.extend(fr2.drain())
+    assert Counter(got) + Counter(rest) == Counter(stream)
+    assert fr2.watermark() == 7               # drained: clock at max ts
+    assert fr2.watermark() >= man["watermark"]
