@@ -13,13 +13,18 @@ tick latency through the fault-tolerant multi-source frontier at 0%/1%/
 10% delivery disorder — see ``benchmarks.bench_ingest``),
 ``BENCH_share.json`` (cross-tenant prefix sharing: shared vs unshared
 tick cost and table bytes at N tenants × overlap fraction — see
-``benchmarks.bench_share``) and ``BENCH_analysis.json`` (static-analysis
+``benchmarks.bench_share``), ``BENCH_mesh.json`` (replica-sharded
+serving: per-replica tick cost vs replica count on an 8-virtual-device
+mesh plus full-vs-delta checkpoint manifest bytes — see
+``benchmarks.bench_mesh``; self-spawns a subprocess so XLA_FLAGS can
+pin the device count before jax initializes) and
+``BENCH_analysis.json`` (static-analysis
 coverage: files / pallas sites / plans verified and post-baseline
 findings per severity — see ``benchmarks.bench_analysis``).
 
 ``--dry`` is the CI smoke mode: tiny shapes, only the join + tick +
-share + analysis benches, but the same JSON schemas, so the emission
-paths can't rot.
+share + mesh + analysis benches, but the same JSON schemas, so the
+emission paths can't rot.
 
 The roofline/dry-run tables (EXPERIMENTS.md §Dry-run/§Roofline) are
 produced separately by ``python -m repro.launch.dryrun --all`` and
@@ -36,6 +41,7 @@ from benchmarks import (
     bench_engine,
     bench_ingest,
     bench_kernels,
+    bench_mesh,
     bench_multiquery,
     bench_service,
     bench_share,
@@ -58,6 +64,7 @@ def main() -> None:
         bench_service.bench_tick_json(reduced=True, dry=True)
         bench_ingest.bench_ingest_json(reduced=True, dry=True)
         bench_share.bench_share_json(reduced=True, dry=True)
+        bench_mesh.bench_mesh_json(reduced=True, dry=True)
         bench_analysis.bench_analysis_json(reduced=True, dry=True)
         print(f"# total bench wall time: {time.time() - t0:.1f}s")
         return
@@ -74,6 +81,7 @@ def main() -> None:
     bench_service.bench_tick_json(reduced=reduced)    # BENCH_tick.json
     bench_ingest.bench_ingest_json(reduced=reduced)   # BENCH_ingest.json
     bench_share.bench_share_json(reduced=reduced)     # BENCH_share.json
+    bench_mesh.bench_mesh_json(reduced=reduced)       # BENCH_mesh.json
     bench_analysis.bench_analysis_json(reduced=reduced)  # BENCH_analysis.json
     bench_multiquery.main(                            # multi-tenant serving
         n_queries=6 if reduced else 12,

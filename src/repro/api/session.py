@@ -246,11 +246,11 @@ class StreamSession:
         tick_cache=None,
         share_prefixes: bool = False,
         late_drop_threshold: float = 0.01,
+        mesh: dict | int | None = None,
         _service: ContinuousSearchService | None = None,
     ):
         if _service is None:
-            _service = ContinuousSearchService(
-                slots_per_group=slots_per_group,
+            common = dict(
                 level_capacity=level_capacity,
                 l0_capacity=l0_capacity,
                 max_new=max_new,
@@ -262,6 +262,19 @@ class StreamSession:
                 tick_cache=tick_cache,
                 enable_sharing=share_prefixes,
             )
+            if mesh is not None:
+                # replica-sharded serving: ``mesh`` is the replica count
+                # or a dict of ShardedSearchService knobs (n_replicas,
+                # slots_per_replica, placement); slot-group width then
+                # comes from n_replicas * slots_per_replica, so
+                # ``slots_per_group`` is ignored on this path.
+                from repro.runtime.mesh import ShardedSearchService
+                mesh_kw = ({"n_replicas": mesh} if isinstance(mesh, int)
+                           else dict(mesh))
+                _service = ShardedSearchService(**mesh_kw, **common)
+            else:
+                _service = ContinuousSearchService(
+                    slots_per_group=slots_per_group, **common)
         self.service = _service
         self.vocab = LabelVocab()
         self._subs: dict[int, Subscription] = {}

@@ -29,6 +29,7 @@ import json
 import os
 import re
 import threading
+import warnings
 import zipfile
 from concurrent.futures import ThreadPoolExecutor
 
@@ -37,6 +38,12 @@ import jax
 
 
 SEP = "::"
+
+# Torn-delta fallbacks observed by load_resolved_manifest in this
+# process: every time a delta manifest chain cannot be replayed (a link
+# pruned or torn) and the caller must fall back to an older compacted
+# base, this counts it — silent fallback would hide retention bugs.
+N_DELTA_FALLBACKS = 0
 
 
 class CheckpointError(RuntimeError):
@@ -55,6 +62,10 @@ def _flatten(tree):
 def _paths(ckpt_dir: str, step: int) -> tuple[str, str]:
     return (os.path.join(ckpt_dir, f"step_{step}.npz"),
             os.path.join(ckpt_dir, f"step_{step}.json"))
+
+
+def _shard_path(ckpt_dir: str, step: int, r: int, n: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step}.shard{r}of{n}.npz")
 
 
 def _sha256(path: str) -> str:
@@ -106,53 +117,151 @@ class _HashingWriter:
         return self._h.hexdigest()
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None):
+def _write_npz_hashed(tmp_path: str, flat: dict) -> str:
+    """Write ``flat`` to ``tmp_path``, returning the content sha256
+    computed WHILE writing (no second pass): zipfile streams
+    sequentially through the non-seekable wrapper."""
+    with open(tmp_path, "wb") as f:
+        hw = _HashingWriter(f)
+        np.savez(hw, **flat)
+    return hw.hexdigest()
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+                    n_shards: int = 1, replicated: tuple = ()):
+    """Publish checkpoint ``step`` atomically.
+
+    With ``n_shards > 1`` (mesh serving, ``repro.runtime.mesh``) the
+    arrays are split into per-replica files ``step_N.shard<r>of<R>.npz``:
+    every key whose top-level name is NOT in ``replicated`` is split
+    into ``n_shards`` contiguous axis-0 blocks (the NamedSharding layout
+    of a sharded slot axis), one per file; replicated keys (e.g. shared
+    prefix-forest tables) are stored once, in shard 0.  Shard 0 is
+    published LAST and is the commit point — ``checkpoint_steps`` only
+    lists a sharded step once shard 0 is visible, and the manifest
+    carries every shard's content hash so ``validate_checkpoint`` proves
+    the whole set belongs together.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(tree)
     out, man_out = _paths(ckpt_dir, step)
-    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}.npz")
-    # hash WHILE writing (no second pass over the npz): zipfile streams
-    # sequentially through the non-seekable wrapper
-    with open(tmp, "wb") as f:
-        hw = _HashingWriter(f)
-        np.savez(hw, **flat)
-    # the manifest records the npz content hash: overwriting an existing
-    # step is two replaces, and the hash is what ties the PAIR together —
-    # a crash between them leaves a new manifest with an old npz, which
-    # validate_checkpoint then rejects as torn instead of silently
-    # restoring mismatched state
-    manifest = {"step": step, "n_arrays": len(flat),
-                "npz_sha256": hw.hexdigest(), **(extra or {})}
     man_tmp = os.path.join(ckpt_dir, f".tmp_step_{step}.json")
+
+    if n_shards <= 1:
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}.npz")
+        digest = _write_npz_hashed(tmp, flat)
+        # the manifest records the npz content hash: overwriting an
+        # existing step is two replaces, and the hash is what ties the
+        # PAIR together — a crash between them leaves a new manifest
+        # with an old npz, which validate_checkpoint then rejects as
+        # torn instead of silently restoring mismatched state
+        manifest = {"step": step, "n_arrays": len(flat),
+                    "npz_sha256": digest, **(extra or {})}
+        with open(man_tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(man_tmp, man_out)       # manifest published first ...
+        os.replace(tmp, out)               # ... npz last: the commit point
+        return out
+
+    repl = set(replicated)
+    shard_flats: list[dict] = [{} for _ in range(n_shards)]
+    for key, arr in flat.items():
+        if key.split(SEP, 1)[0] in repl or arr.ndim == 0:
+            shard_flats[0][key] = arr
+            continue
+        if arr.shape[0] % n_shards:
+            raise ValueError(
+                f"cannot shard {key!r}: axis-0 size {arr.shape[0]} not "
+                f"divisible by n_shards={n_shards}")
+        block = arr.shape[0] // n_shards
+        for r in range(n_shards):
+            shard_flats[r][key] = arr[r * block:(r + 1) * block]
+
+    tmps, digests = [], []
+    for r in range(n_shards):
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}.shard{r}.npz")
+        digests.append(_write_npz_hashed(tmp, shard_flats[r]))
+        tmps.append(tmp)
+    manifest = {"step": step, "n_arrays": len(flat),
+                "shards": {"n": n_shards, "sha256": digests},
+                **(extra or {})}
     with open(man_tmp, "w") as f:
         json.dump(manifest, f)
-    os.replace(man_tmp, man_out)               # manifest published first ...
-    os.replace(tmp, out)                       # ... npz last: the commit point
-    return out
+    os.replace(man_tmp, man_out)           # manifest first ...
+    for r in range(n_shards - 1, -1, -1):  # ... shard 0 last: commit point
+        os.replace(tmps[r], _shard_path(ckpt_dir, step, r, n_shards))
+    return _shard_path(ckpt_dir, step, 0, n_shards)
+
+
+def _delta_prev(manifest: dict) -> int | None:
+    """The previous step a delta manifest chains to (``None`` if the
+    manifest is self-contained)."""
+    for k, v in manifest.items():
+        if k.endswith("_delta") and isinstance(v, dict) and "prev" in v:
+            return int(v["prev"])
+    return None
 
 
 def prune_checkpoints(ckpt_dir: str, keep_last: int) -> list[int]:
     """Delete all but the newest ``keep_last`` published checkpoints;
     returns the pruned step ids.  A long-lived serving loop checkpoints
-    forever — without retention the directory grows without bound."""
+    forever — without retention the directory grows without bound.
+
+    Delta-chain aware: arrays (npz / shard files) of pruned steps always
+    go, but a pruned step's JSON manifest survives while any KEPT step's
+    delta chain still references it — deleting the link would tear every
+    downstream delta manifest back to the last compacted base."""
     if keep_last <= 0:
         raise ValueError("keep_last must be positive")
-    pruned = checkpoint_steps(ckpt_dir)[:-keep_last]
+    steps = checkpoint_steps(ckpt_dir)
+    pruned, kept = steps[:-keep_last], steps[-keep_last:]
+    needed: set[int] = set()
+    for s in kept:
+        cur: int | None = s
+        while cur is not None and cur not in needed:
+            needed.add(cur)
+            try:
+                cur = _delta_prev(load_manifest(ckpt_dir, cur))
+            except CheckpointError:
+                break
     for step in pruned:
-        for path in _paths(ckpt_dir, step):
+        npz, _ = _paths(ckpt_dir, step)
+        for path in [npz] + _shard_files(ckpt_dir, step):
             try:
                 os.remove(path)
+            except OSError:
+                pass
+    # manifest sweep: every JSON not referenced by a kept step's chain
+    # goes — including manifests ORPHANED by earlier prunes (kept for a
+    # chain that has since compacted away), so retention stays bounded
+    keep_man = needed | set(kept)
+    for f in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)\.json", f)
+        if m and int(m.group(1)) not in keep_man:
+            try:
+                os.remove(os.path.join(ckpt_dir, f))
             except OSError:
                 pass
     return pruned
 
 
-def checkpoint_steps(ckpt_dir: str) -> list[int]:
-    """All steps with a published ``.npz``, ascending (not validated)."""
+def _shard_files(ckpt_dir: str, step: int) -> list[str]:
     if not os.path.isdir(ckpt_dir):
         return []
-    return sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
-                  if (m := re.fullmatch(r"step_(\d+)\.npz", f)))
+    pat = re.compile(rf"step_{step}\.shard\d+of\d+\.npz")
+    return [os.path.join(ckpt_dir, f) for f in os.listdir(ckpt_dir)
+            if pat.fullmatch(f)]
+
+
+def checkpoint_steps(ckpt_dir: str) -> list[int]:
+    """All steps with published arrays, ascending (not validated).  A
+    sharded step counts once its shard-0 file — the commit point — is
+    visible."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted({int(m.group(1)) for f in os.listdir(ckpt_dir)
+                   if (m := re.fullmatch(
+                       r"step_(\d+)(?:\.shard0of\d+)?\.npz", f))})
 
 
 def validate_checkpoint(ckpt_dir: str, step: int) -> None:
@@ -171,6 +280,21 @@ def validate_checkpoint(ckpt_dir: str, step: int) -> None:
             manifest = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         raise CheckpointError(f"step {step}: bad manifest {man}: {e}") from e
+    shards = manifest.get("shards")
+    if shards is not None:
+        n = int(shards["n"])
+        for r, want in enumerate(shards["sha256"]):
+            path = _shard_path(ckpt_dir, step, r, n)
+            try:
+                got = _sha256(path)
+            except OSError as e:
+                raise CheckpointError(
+                    f"step {step}: missing shard {path}: {e}") from e
+            if got != want:
+                raise CheckpointError(
+                    f"step {step}: shard {r}/{n} does not match its "
+                    "manifest hash (torn write?)")
+        return
     want = manifest.get("npz_sha256")
     try:
         if want is not None:
@@ -216,6 +340,121 @@ def load_manifest(ckpt_dir: str, step: int) -> dict:
         raise CheckpointError(f"step {step}: bad manifest {man}: {e}") from e
 
 
+# --------------------------------------------------------------------- #
+# Incremental manifests: base + per-step deltas
+# --------------------------------------------------------------------- #
+# A service with 10^5 tenants cannot re-serialize every query spec on
+# every checkpoint step; instead it writes a full ("compacted") manifest
+# every K steps and small structural diffs in between.  The patch
+# format is JSON-safe and unambiguous:
+#   {"__deleted__": true}   delete this key
+#   {"__replace__": v}      set this key to the literal value v
+#   any other dict          recurse (nested patch)
+#   any non-dict value      set this key to the value
+def dict_diff(old: dict, new: dict) -> dict:
+    """Minimal patch such that ``apply_patch(old, patch) == new``."""
+    patch: dict = {}
+    for k in old:
+        if k not in new:
+            patch[k] = {"__deleted__": True}
+    for k, v in new.items():
+        if k in old:
+            ov = old[k]
+            if ov == v:
+                continue
+            if isinstance(ov, dict) and isinstance(v, dict):
+                sub = dict_diff(ov, v)
+                if sub:
+                    patch[k] = sub
+                continue
+        patch[k] = {"__replace__": v} if isinstance(v, dict) else v
+    return patch
+
+
+def apply_patch(base: dict, patch: dict) -> dict:
+    out = dict(base)
+    for k, v in patch.items():
+        if isinstance(v, dict):
+            if v.get("__deleted__") is True and len(v) == 1:
+                out.pop(k, None)
+            elif "__replace__" in v and len(v) == 1:
+                out[k] = v["__replace__"]
+            else:
+                out[k] = apply_patch(
+                    out.get(k, {}) if isinstance(out.get(k), dict) else {}, v)
+        else:
+            out[k] = v
+    return out
+
+
+def load_resolved_manifest(ckpt_dir: str, step: int, key: str) -> dict:
+    """Resolve ``manifest[key]`` at ``step``, replaying delta manifests.
+
+    A manifest either carries the full payload under ``key`` (a
+    compacted base) or ``{key}_delta = {"prev": step, "patch": {...}}``;
+    the chain is walked back to the nearest base and the patches are
+    applied forward.  A torn chain — a pruned or unreadable link — is
+    counted in ``N_DELTA_FALLBACKS``, warned about, and raised as
+    ``CheckpointError`` so restore candidate loops fall back (loudly) to
+    the last compacted base still on disk.
+    """
+    global N_DELTA_FALLBACKS
+    patches: list[dict] = []
+    seen: set[int] = set()
+    cur = step
+    while True:
+        if cur in seen:
+            raise CheckpointError(
+                f"step {step}: delta manifest chain loops at {cur}")
+        seen.add(cur)
+        try:
+            man = load_manifest(ckpt_dir, cur)
+        except CheckpointError:
+            if patches:          # torn mid-chain, not just a bad head
+                N_DELTA_FALLBACKS += 1
+                warnings.warn(
+                    f"checkpoint step {step}: delta chain torn at step "
+                    f"{cur}; falling back (N_DELTA_FALLBACKS="
+                    f"{N_DELTA_FALLBACKS})", stacklevel=2)
+            raise
+        if key in man:
+            base = man[key]
+            break
+        delta = man.get(f"{key}_delta")
+        if delta is None:
+            raise CheckpointError(
+                f"step {cur}: manifest has neither {key!r} nor "
+                f"'{key}_delta'")
+        patches.append(delta["patch"])
+        cur = int(delta["prev"])
+    for patch in reversed(patches):
+        base = apply_patch(base, patch)
+    return base
+
+
+def _load_sharded(ckpt_dir: str, step: int) -> dict:
+    """Reassemble a sharded checkpoint's arrays into one flat dict."""
+    files = _shard_files(ckpt_dir, step)
+    m = re.search(r"shard\d+of(\d+)\.npz", os.path.basename(files[0]))
+    n = int(m.group(1))
+    ds = []
+    for r in range(n):
+        path = _shard_path(ckpt_dir, step, r, n)
+        try:
+            ds.append(np.load(path))
+        except (OSError, zipfile.BadZipFile, ValueError, EOFError) as e:
+            raise CheckpointError(
+                f"step {step}: unreadable shard {path}: {e}") from e
+    out: dict = {}
+    shard_keys = set(ds[1].files) if n > 1 else set()
+    for key in ds[0].files:
+        if key in shard_keys:
+            out[key] = np.concatenate([d[key] for d in ds], axis=0)
+        else:
+            out[key] = ds[0][key]           # replicated: stored once
+    return out
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, like_tree,
                        mesh=None, specs=None):
     """Restore into the structure of ``like_tree``.
@@ -227,12 +466,22 @@ def restore_checkpoint(ckpt_dir: str, step: int, like_tree,
     *shape* mismatch raises ``ValueError`` instead: the npz publishes
     atomically, so either one means the caller's state schema drifted —
     a real config error that must be loud, not silently skipped.
+
+    Sharded checkpoints (``save_checkpoint(n_shards=...)``) reassemble
+    transparently: keys present in every shard concatenate along axis 0
+    in shard order, shard-0-only keys are replicated values — the
+    result is mesh-agnostic host arrays, so a checkpoint written on R
+    replicas restores onto any mesh size.
     """
     npz, _ = _paths(ckpt_dir, step)
     try:
         data = np.load(npz)
     except (OSError, zipfile.BadZipFile, ValueError, EOFError) as e:
-        raise CheckpointError(f"step {step}: unreadable {npz}: {e}") from e
+        shard0 = _shard_files(ckpt_dir, step)
+        if not shard0:
+            raise CheckpointError(
+                f"step {step}: unreadable {npz}: {e}") from e
+        data = _load_sharded(ckpt_dir, step)
     flat_like, tdef = jax.tree.flatten(like_tree)
     flat_keys = [
         SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
@@ -276,14 +525,18 @@ class AsyncCheckpointer:
         self._pending = []
 
     def save(self, step: int, tree, extra: dict | None = None,
-             keep_last: int | None = None):
+             keep_last: int | None = None, n_shards: int = 1,
+             replicated: tuple = ()):
         """With ``keep_last``, older checkpoints are pruned on the writer
         thread AFTER the new step publishes (single-thread FIFO pool, so
-        the prune can never race ahead of the write)."""
+        the prune can never race ahead of the write).  ``n_shards`` /
+        ``replicated`` pass through to ``save_checkpoint`` (per-replica
+        shard files for mesh services)."""
         host = jax.tree.map(np.asarray, jax.device_get(tree))  # sync snapshot
 
         def _write():
-            out = save_checkpoint(self.ckpt_dir, step, host, extra)
+            out = save_checkpoint(self.ckpt_dir, step, host, extra,
+                                  n_shards=n_shards, replicated=replicated)
             if keep_last is not None:
                 prune_checkpoints(self.ckpt_dir, keep_last)
             return out

@@ -1,0 +1,36 @@
+"""JAX version compatibility shims shared across the tree.
+
+The only dance currently needed is ``shard_map``: newer JAX exposes it
+as ``jax.shard_map`` and renamed the replication-check kwarg from
+``check_rep`` to ``check_vma``; older versions only have
+``jax.experimental.shard_map.shard_map``.  Both ``core.distributed``
+(capacity-axis sharding) and ``runtime.mesh`` (slot/tenant-axis
+sharding) need the same resolution, so it lives here exactly once.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map
+
+
+def shard_map_compat_kwargs() -> dict:
+    """Kwargs disabling the replication checker, whatever it is called.
+
+    Our shard-mapped ticks mix replicated outputs (psum-reduced stats)
+    with sharded outputs (per-slot tables), which older checkers reject
+    spuriously; probe the signature instead of pinning a JAX version.
+    """
+    try:
+        params = inspect.signature(shard_map).parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtins/C fns
+        return {}
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return {name: False}
+    return {}

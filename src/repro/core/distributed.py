@@ -16,34 +16,14 @@ reconstruction, expiry cascades — is shard-local by construction
 
 from __future__ import annotations
 
-import inspect
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-# JAX moved shard_map around across releases: 0.4.x ships it under
-# jax.experimental.shard_map; newer versions expose jax.shard_map.
-_shard_map = getattr(jax, "shard_map", None)
-if _shard_map is None:  # pragma: no cover - version dependent
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-
-def _shard_map_compat_kwargs() -> dict:
-    """Disable replication/VMA checking under whichever name this JAX
-    version uses (``check_vma`` on new JAX, ``check_rep`` on 0.4.x); the
-    engine's out_specs mix replicated scalars with sharded tables, which
-    the strict checker rejects on some versions."""
-    try:
-        params = inspect.signature(_shard_map).parameters
-    except (TypeError, ValueError):  # pragma: no cover - builtin/odd callables
-        return {}
-    for name in ("check_vma", "check_rep"):
-        if name in params:
-            return {name: False}
-    return {}
-
 from repro.core import join as J
+from repro.core.compat import (
+    shard_map as _shard_map,
+    shard_map_compat_kwargs as _shard_map_compat_kwargs,
+)
 from repro.core.engine import build_tick
 from repro.core.plan import ExecutionPlan
 from repro.core.state import EngineState, init_state
@@ -65,6 +45,7 @@ def build_sharded_tick(
     axes=("data",),
     backend: str = J.JoinBackend.REF,
     extract_matches: bool = False,
+    prefix_depth: int = 0,
 ):
     """Returns ``(tick, state)`` with ``tick`` jit-compiled under shard_map
     and ``state`` placed according to the sharding spec.
@@ -72,6 +53,12 @@ def build_sharded_tick(
     ``axes`` may name one or more mesh axes; the capacity dimension is
     sharded over their product (e.g. ``('pod', 'data')`` on the
     multi-pod production mesh).
+
+    With ``prefix_depth > 0`` the tick takes a shared-prefix
+    ``NodeView`` (``repro.core.share``) as a third argument; the view is
+    REPLICATED across shards — the forest node advances once outside the
+    shard_map — and the engine body partitions its join output
+    deterministically (see ``build_tick_body``).
     """
     n_shards = 1
     for a in axes:
@@ -85,9 +72,10 @@ def build_sharded_tick(
         extract_matches=extract_matches,
         axis_name=axis_name,
         n_shards=n_shards,
+        prefix_depth=prefix_depth,
     )
 
-    state0 = init_state(plan)
+    state0 = init_state(plan, prefix_depth)
     specs = _state_specs(state0, axes)
 
     from repro.core.engine import TickResult
@@ -102,11 +90,16 @@ def build_sharded_tick(
         match_valid=P(axes),
     )
 
+    in_specs = (specs, batch_specs)
+    if prefix_depth:
+        from repro.core.share import NodeView
+        in_specs = in_specs + (NodeView(P(), P(), P(), P(), P()),)
+
     tick = jax.jit(
         _shard_map(
             inner,
             mesh=mesh,
-            in_specs=(specs, batch_specs),
+            in_specs=in_specs,
             out_specs=(specs, out_res_specs),
             **_shard_map_compat_kwargs(),
         )

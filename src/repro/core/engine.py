@@ -189,11 +189,19 @@ def build_tick_body(
     validity).  Semantics per tenant are exactly those of the unshared
     body — the view IS what the local level-``prefix_depth`` recon would
     have been.
+
+    Sharding composes with sharing (``axis_name`` AND ``prefix_depth``
+    both set): the prefix view is REPLICATED per shard — the forest node
+    advances once and its tables are broadcast, never partitioned — so
+    any join whose left side is the replicated prefix produces identical
+    pairs on every shard.  Those pairs are round-robined over shards by
+    pair index before appending (deterministic refcount/row
+    partitioning), and their drop counts — computed redundantly on every
+    shard — accumulate in a separate bucket psum'd then divided by
+    ``n_shards``.  Deeper suffix levels inherit parent-locality as
+    usual.
     """
     if prefix_depth:
-        if axis_name is not None:
-            raise ValueError(
-                "prefix sharing is not supported under shard_map")
         if not (0 < prefix_depth <= len(plan.subqueries[0].levels)):
             raise ValueError(
                 f"prefix_depth {prefix_depth} out of range for subquery 0 "
@@ -291,6 +299,15 @@ def build_tick_body(
         l0 = tuple(t._replace(fresh=jnp.zeros_like(t.fresh)) for t in state.l0)
 
         n_overflow = jnp.zeros((), I32)
+        # drops computed on REPLICATED inputs (prefix-view joins under
+        # sharding): every shard counts the same drop, so this bucket is
+        # psum'd then divided by n_shards at the end of the tick
+        n_overflow_repl = jnp.zeros((), I32)
+
+        def _own_rows(n):
+            """Round-robin shard ownership mask over a row/pair index."""
+            my_shard = jax.lax.axis_index(axis_name)
+            return (jnp.arange(n) % n_shards) == my_shard
 
         # -- 1. per-query-edge label match mask [n_qedges, B] ---------- #
         edge_used = jnp.any(ematch, axis=0)
@@ -338,6 +355,14 @@ def build_tick_body(
                         bbind, bets, em,
                         level_rel[(si, li)], _trel_chain(prev.ets.shape[1]),
                         lv.max_new, window, backend)
+                    if axis_name is not None and li == start and start:
+                        # left side is the replicated prefix view: every
+                        # shard computed the same pairs — partition them
+                        # deterministically so each lands exactly once
+                        pv = pv & _own_rows(pv.shape[0])
+                        n_overflow_repl += nd1
+                    else:
+                        n_overflow += nd1
                     t, nd2 = _append_level(
                         sub[ti], a_idx,
                         jnp.take(batch.src, b_idx, mode="clip"),
@@ -345,7 +370,7 @@ def build_tick_body(
                         jnp.take(batch.ts, b_idx, mode="clip"),
                         pv)
                     sub[ti] = t
-                    n_overflow += nd1 + nd2
+                    n_overflow += nd2
                 # reconstruct this level's denormalized view (post-append)
                 t = sub[ti]
                 if li == 0:
@@ -369,6 +394,12 @@ def build_tick_body(
         levels = tuple(new_levels)
 
         # -- 3. L_0 phase: delta joins across TC-subqueries ------------ #
+        # When subquery 0 is FULLY prefixed its final view is the shared
+        # (replicated) prefix table itself: its delta needs no gather,
+        # and joins with it on the left produce replicated pairs that
+        # must be ownership-partitioned before appending.
+        a_repl = bool(prefix_depth) \
+            and prefix_depth == len(plan.subqueries[0].levels)
         new_l0 = []
         a_view = recons[0][-1]  # L_0^1 ≡ P_1's final item (paper Fig. 8)
         for gi, js in enumerate(plan.l0_joins):
@@ -378,7 +409,11 @@ def build_tick_body(
 
             # J1: ΔA ⋈ B (old ∪ Δ)
             da, _, nd0 = _compact(a_view, a_view.fresh & a_view.valid, d)
-            if axis_name is not None:
+            if a_repl:
+                n_overflow_repl += nd0
+            else:
+                n_overflow += nd0
+            if axis_name is not None and not a_repl:
                 da = _View(*(
                     jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
                     for x in da))
@@ -407,6 +442,13 @@ def build_tick_body(
                 a_view.bind, a_view.ets, a_view.valid & ~a_view.fresh,
                 db.bind, db.ets, db.valid,
                 js.rel, js.trel, d, window, backend)
+            if axis_name is not None and a_repl:
+                # replicated A × gathered (replicated) ΔB: identical
+                # pairs on every shard — partition before append
+                pv2 = pv2 & _own_rows(pv2.shape[0])
+                n_overflow_repl += nd4
+            else:
+                n_overflow += nd4
             nb2 = jnp.take(db.bind, b2, axis=0, mode="clip")
             out_bind2 = jnp.concatenate(
                 [jnp.take(a_view.bind, a2, axis=0, mode="clip")]
@@ -418,9 +460,10 @@ def build_tick_body(
                  jnp.take(db.ets, b2, axis=0, mode="clip")], axis=1)
             tbl, nd5 = _append_l0(tbl, out_bind2, out_ets2, pv2)
 
-            n_overflow += nd0 + nd1 + nd2 + nd3 + nd4 + nd5
+            n_overflow += nd1 + nd2 + nd3 + nd5
             new_l0.append(tbl)
             a_view = _View(tbl.bindings, tbl.ets, tbl.valid, tbl.fresh)
+            a_repl = False  # the L0 table itself is always sharded
         l0 = tuple(new_l0)
 
         # -- 4. emit (before end-of-tick expiry: a match created mid-tick
@@ -428,6 +471,10 @@ def build_tick_body(
         #       matching sequential replay) --------------------------- #
         final = a_view
         new_mask = final.fresh & final.valid
+        if axis_name is not None and a_repl:
+            # fully-prefixed chain query: the final view is replicated —
+            # partition emission so each match is reported exactly once
+            new_mask = new_mask & _own_rows(new_mask.shape[0])
         n_new = jnp.sum(new_mask, dtype=I32)
         if axis_name is not None:
             n_new = jax.lax.psum(n_new, axis_name)
@@ -446,8 +493,11 @@ def build_tick_body(
             prefix_view.valid_after if prefix_depth else None)
 
         if axis_name is not None:
-            n_overflow = jax.lax.psum(n_overflow, axis_name)
+            n_overflow = jax.lax.psum(n_overflow, axis_name) \
+                + jax.lax.psum(n_overflow_repl, axis_name) // n_shards
             n_discard = jax.lax.psum(n_discard, axis_name) // n_shards
+        else:
+            n_overflow = n_overflow + n_overflow_repl
 
         stats = EngineStats(
             n_matches_total=state.stats.n_matches_total + n_new,
@@ -470,6 +520,7 @@ def build_tick(
     max_out: int | None = None,
     axis_name: str | None = None,
     n_shards: int = 1,
+    prefix_depth: int = 0,
 ):
     """Compile ``plan`` into a jit-able ``tick(state, batch) -> (state, res)``.
 
@@ -499,15 +550,22 @@ def build_tick(
         max_out=max_out,
         axis_name=axis_name,
         n_shards=n_shards,
+        prefix_depth=prefix_depth,
     )
     esl = jnp.asarray(plan.edge_src_label)
     edl = jnp.asarray(plan.edge_dst_label)
     eel = jnp.asarray(plan.edge_edge_label)
     window = plan.window
 
-    def tick(state: EngineState, batch: EdgeBatch, watermark=None):
-        return body(state, batch, edge_match_mask(batch, esl, edl, eel),
-                    window, watermark=watermark)
+    if prefix_depth:
+        def tick(state: EngineState, batch: EdgeBatch, prefix_view,
+                 watermark=None):
+            return body(state, batch, edge_match_mask(batch, esl, edl, eel),
+                        window, prefix_view, watermark=watermark)
+    else:
+        def tick(state: EngineState, batch: EdgeBatch, watermark=None):
+            return body(state, batch, edge_match_mask(batch, esl, edl, eel),
+                        window, watermark=watermark)
 
     return tick
 

@@ -408,6 +408,40 @@ class SlotTickCache:
                 prefix_depth=prefix_depth),
             jit, donate)
 
+    def get_mesh(
+        self,
+        template_plan: ExecutionPlan,
+        mesh,                                    # jax.sharding.Mesh
+        slots_per_replica: int,
+        backend: str = J.JoinBackend.REF,
+        extract_matches: bool = True,
+        max_out: int | None = None,
+        donate: bool = True,
+        prefix_depth: int = 0,
+    ):
+        """Compiled mesh slot tick (``repro.runtime.mesh``): the slot
+        axis sharded over the mesh's replica axis.  Keyed by structure
+        PLUS mesh identity (device ids + per-replica slot count), so a
+        service restored onto the same mesh re-arms with cache hits —
+        zero rebuilds, and the shared jitted tick keeps its XLA trace
+        cache per replica."""
+        from repro.core.registry import plan_signature
+        from repro.runtime.mesh import build_mesh_slot_tick
+
+        mesh_key = tuple(d.id for d in mesh.devices.flat)
+        key = ("mesh", plan_signature(template_plan), mesh_key,
+               slots_per_replica, backend, extract_matches, max_out,
+               donate, prefix_depth)
+        # the builder jits internally (one jit per watermark mode), so
+        # _get must not wrap it again
+        return self._get(
+            key,
+            lambda: build_mesh_slot_tick(
+                template_plan, mesh, backend=backend,
+                extract_matches=extract_matches, max_out=max_out,
+                donate=donate, prefix_depth=prefix_depth),
+            jit=False, donate=False)
+
     def get_node(
         self,
         spec,                                   # repro.core.share.NodeSpec

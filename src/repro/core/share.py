@@ -448,6 +448,26 @@ class SharedPrefixForest:
         return total
 
     # ------------------------------------------------------------------ #
+    def replica_refcounts(self, assignments, n_replicas: int) -> dict:
+        """Deterministic per-replica partition of the forest's refcounts.
+
+        Under mesh serving (``repro.runtime.mesh``) node tables are
+        REPLICATED — every replica joins against the same broadcast
+        view — but each aliasing tenant lives on exactly one replica, so
+        the refcount of every node partitions deterministically by
+        placement.  ``assignments`` is an iterable of ``(leaf, replica)``
+        pairs, one per live tenant; returns ``{pid: [count per
+        replica]}`` with ``sum(counts) == node.refcount`` for every node
+        (the mesh checkpoint manifest records and re-verifies this)."""
+        out: dict[int, list[int]] = {}
+        for leaf, r in assignments:
+            node = leaf
+            while node is not None:
+                counts = out.setdefault(node.pid, [0] * n_replicas)
+                counts[r] += 1
+                node = node.parent
+        return out
+
     def chain_overflow(self, leaf: PrefixNode) -> int:
         """Cumulative dropped appends along one tenant's chain."""
         total, node = 0, leaf

@@ -2,5 +2,13 @@
 straggler mitigation."""
 
 from repro.runtime.fault import FaultTolerantLoop, SimulatedFailure
+from repro.runtime.mesh import (
+    LoadBalancedPlacement,
+    MeshTickStats,
+    PlacementPolicy,
+    RoundRobinPlacement,
+    ShardedSearchService,
+    build_mesh_slot_tick,
+)
 from repro.runtime.service import ContinuousSearchService
 from repro.runtime.straggler import TickCoalescer

@@ -102,7 +102,8 @@ from repro.checkpoint import (
     AsyncCheckpointer,
     CheckpointError,
     checkpoint_steps,
-    load_manifest,
+    dict_diff,
+    load_resolved_manifest,
     restore_checkpoint,
     validate_checkpoint,
 )
@@ -171,9 +172,12 @@ class _Group:
     prefix: object = None             # share.PrefixNode leaf | None
     prefix_depth: int = 0             # externalized subquery-0 levels
 
-    def free_slot(self) -> int | None:
-        for k, qid in enumerate(self.qids):
-            if qid is None:
+    def free_slot(self, lo: int = 0, hi: int | None = None) -> int | None:
+        """First free slot in ``[lo, hi)`` (mesh placement restricts the
+        search to one replica's contiguous slot block)."""
+        hi = len(self.qids) if hi is None else hi
+        for k in range(lo, hi):
+            if self.qids[k] is None:
                 return k
         return None
 
@@ -200,6 +204,7 @@ class ContinuousSearchService:
         keep_checkpoints: int = 8,
         tick_cache: SlotTickCache | None = None,
         enable_sharing: bool = False,
+        compact_every: int = 1,
     ):
         if backend not in (J.JoinBackend.REF, J.JoinBackend.PALLAS,
                            J.JoinBackend.PALLAS_INTERPRET):
@@ -231,6 +236,17 @@ class ContinuousSearchService:
         self._frontier = None        # IngestFrontier bound by serve_frontier
         self.restored_ingest = None  # ingest manifest from restore()
         self._ckpt_step = 0          # last step id written (monotonic)
+        # incremental manifests: with compact_every > 1 only every K-th
+        # checkpoint re-serializes the whole registry; the steps between
+        # write structural DELTAS against the previous step's manifest
+        # (O(churn) bytes instead of O(total tenants) — see
+        # repro.checkpoint.dict_diff / load_resolved_manifest)
+        if compact_every < 1:
+            raise ValueError("compact_every must be >= 1")
+        self.compact_every = compact_every
+        self._last_manifest: dict | None = None   # resolved, last written
+        self._last_man_step: int | None = None
+        self._chain_len = 0          # delta steps since last compacted base
         self.n_compiles = 0          # build_slot_tick cache misses (this service)
         self.n_edges_ingested = 0
         self.n_ticks = 0
@@ -270,6 +286,21 @@ class ContinuousSearchService:
         self._next_gid += 1
         return g
 
+    def _place(self, groups: list, plan: ExecutionPlan, leaf,
+               signature) -> tuple[_Group, int]:
+        """Pick ``(group, slot)`` for a new tenant of this group key,
+        allocating a fresh group when none has a free slot.  The single
+        placement hook: ``repro.runtime.mesh`` overrides it to route the
+        choice through a replica ``PlacementPolicy`` and restrict the
+        slot search to the chosen replica's block."""
+        for g in groups:
+            k = g.free_slot()
+            if k is not None:
+                return g, k
+        g = self._new_group(plan, leaf)
+        groups.append(g)
+        return g, 0
+
     # ------------------------------------------------------------------ #
     def register(self, query: QueryGraph, window: int,
                  plan: ExecutionPlan | None = None) -> int:
@@ -297,12 +328,7 @@ class ContinuousSearchService:
                 self._prefix_of[qid] = leaf
             gkey = (rq.signature, None if leaf is None else leaf.pid)
             groups = self._groups.setdefault(gkey, [])
-            group = next((g for g in groups if g.free_slot() is not None),
-                         None)
-            if group is None:
-                group = self._new_group(rq.plan, leaf)
-                groups.append(group)
-            k = group.free_slot()
+            group, k = self._place(groups, rq.plan, leaf, rq.signature)
             group.sstate = write_slot(group.sstate, group.template, k,
                                       rq.plan, empty=group.empty)
         except Exception:
@@ -728,6 +754,7 @@ class ContinuousSearchService:
                 "donate": self.donate,
                 "keep_checkpoints": self.keep_checkpoints,
                 "enable_sharing": self.forest is not None,
+                "compact_every": self.compact_every,
             },
             "queries": {
                 str(qid): {
@@ -742,9 +769,11 @@ class ContinuousSearchService:
                 }
                 for qid in self.registry.qids()
             },
-            "groups": [
-                {
-                    "gid": g.gid,
+            # keyed by gid (not a list): stable keys make churn deltas
+            # O(changed groups) under dict_diff instead of shifting every
+            # downstream entry when a group is dropped
+            "groups": {
+                str(g.gid): {
                     "template_query": g.template.query.to_spec(),
                     "template_window": int(g.template.window),
                     "template_decomposition": [
@@ -755,7 +784,7 @@ class ContinuousSearchService:
                                    else g.prefix.pid),
                 }
                 for g in self._iter_groups()
-            ],
+            },
             "forest": (None if self.forest is None
                        else self.forest.to_manifest()),
             # ingest-frontier resume state (serve_frontier binds it):
@@ -770,6 +799,18 @@ class ContinuousSearchService:
             },
         }
 
+    def _ckpt_tree(self) -> dict:
+        tree = {str(g.gid): g.sstate for g in self._iter_groups()}
+        if self.forest is not None:
+            tree.update({f"prefix{n.pid}": n.state
+                         for n in self.forest.nodes()})
+        return tree
+
+    def _ckpt_save_kwargs(self) -> dict:
+        """Extra ``AsyncCheckpointer.save`` kwargs — the mesh service
+        overrides this with per-replica shard splitting."""
+        return {}
+
     def checkpoint(self, step: int | None = None):
         """Snapshot all groups' ``SlotState`` pytrees + the service
         manifest, asynchronously.  Returns the writer future (call
@@ -779,19 +820,34 @@ class ContinuousSearchService:
         advanced (e.g. a registry-only change checkpointed twice at the
         same tick): overwriting an existing step would put previously
         durable state at risk if a crash tore the rewrite.
+
+        With ``compact_every > 1``, at most every K-th step carries the
+        full manifest; the steps between write ``service_delta`` patches
+        against the previous step (arrays are always complete — only the
+        registry/layout metadata is incremental).  Restore replays the
+        chain via ``load_resolved_manifest`` and falls back to the last
+        compacted base if a link is torn.
         """
         if self.ckpt is None:
             raise ValueError("service was constructed without ckpt_dir")
         if step is None:
             step = max(self.n_ticks, self._ckpt_step + 1)
         self._ckpt_step = max(self._ckpt_step, step)
-        tree = {str(g.gid): g.sstate for g in self._iter_groups()}
-        if self.forest is not None:
-            tree.update({f"prefix{n.pid}": n.state
-                         for n in self.forest.nodes()})
-        return self.ckpt.save(step, tree,
-                              extra={"service": self._manifest()},
-                              keep_last=self.keep_checkpoints)
+        man = self._manifest()
+        if (self._last_manifest is not None
+                and self._chain_len + 1 < self.compact_every):
+            extra = {"service_delta": {
+                "prev": self._last_man_step,
+                "patch": dict_diff(self._last_manifest, man)}}
+            self._chain_len += 1
+        else:
+            extra = {"service": man}
+            self._chain_len = 0
+        self._last_manifest = man
+        self._last_man_step = step
+        return self.ckpt.save(step, self._ckpt_tree(), extra=extra,
+                              keep_last=self.keep_checkpoints,
+                              **self._ckpt_save_kwargs())
 
     @classmethod
     def restore(
@@ -836,13 +892,19 @@ class ContinuousSearchService:
     @classmethod
     def _restore_step(cls, ckpt_dir, step, tick_cache, overrides):
         validate_checkpoint(ckpt_dir, step)   # torn pair / file -> skip
-        man = load_manifest(ckpt_dir, step)
-        if "service" not in man:
-            raise CheckpointError(
-                f"step {step}: not a ContinuousSearchService checkpoint")
-        man = man["service"]
+        # Resolves incremental ``service_delta`` chains back to the last
+        # full manifest; torn links raise CheckpointError so the restore
+        # candidate loop falls back to an older step.
+        man = load_resolved_manifest(ckpt_dir, step, "service")
+        config = dict(man["config"])
+        if "mesh" in config and not hasattr(cls, "_MESH_SERVICE"):
+            # Checkpoint was written by a ShardedSearchService but
+            # restore() was called on the base class: delegate.
+            from repro.runtime.mesh import ShardedSearchService
+            return ShardedSearchService._restore_step(
+                ckpt_dir, step, tick_cache, overrides)
         svc = cls(ckpt_dir=ckpt_dir, tick_cache=tick_cache,
-                  **{**man["config"], **overrides})
+                  **{**config, **overrides})
         svc.manifest_extra = man.get("extra", {})
         svc.restored_ingest = man.get("ingest")
         for qid_s, ent in man["queries"].items():
@@ -854,7 +916,8 @@ class ContinuousSearchService:
         if svc.forest is not None and man.get("forest"):
             by_pid = svc.forest.restore_nodes(man["forest"])
         like = {}
-        for gspec in man["groups"]:
+        for gid_s, gspec in sorted(man["groups"].items(),
+                                   key=lambda kv: int(kv[0])):
             template = svc.registry.compile(
                 QueryGraph.from_spec(gspec["template_query"]),
                 int(gspec["template_window"]),
@@ -862,7 +925,7 @@ class ContinuousSearchService:
             pid = gspec.get("prefix_pid")
             leaf = None if pid is None else by_pid[int(pid)]
             g = svc._new_group(template, leaf)
-            g.gid = int(gspec["gid"])
+            g.gid = int(gid_s)
             g.qids = [None if q is None else int(q) for q in gspec["qids"]]
             gkey = (plan_signature(template),
                     None if leaf is None else leaf.pid)
@@ -886,7 +949,7 @@ class ContinuousSearchService:
             for n in svc.forest.nodes():
                 like[f"prefix{n.pid}"] = n.state
         svc._next_gid = 1 + max(
-            (g["gid"] for g in man["groups"]), default=-1)
+            (int(gid) for gid in man["groups"]), default=-1)
         restored = restore_checkpoint(ckpt_dir, step, like)
         for g in svc._iter_groups():
             g.sstate = jax.tree.map(jnp.asarray, restored[str(g.gid)])

@@ -1,0 +1,250 @@
+"""Subprocess helper: replica-sharded serving parity on 8 virtual devices.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the parent
+test sets this; tests/test_mesh.py asserts the MESH-OK sentinel).
+
+Proves, end to end on a real multi-device mesh:
+
+* sharded service == single-device service == brute-force oracle, as
+  exact per-tenant match multisets, on 1-, 2- and 8-replica meshes,
+  with prefix sharing enabled and tenant churn mid-stream;
+* crash + restore through SHARDED checkpoints reports exactly the
+  uninterrupted run's multiset — restoring onto the same mesh (zero
+  warm rebuilds) and onto a DIFFERENT mesh size (8 -> 2 repack);
+* placement policies put tenants where they claim to;
+* the engine-level composition: capacity-axis ``build_sharded_tick``
+  with a replicated shared-prefix view matches the unsharded prefix
+  tick (full and partial prefix depths).
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+from collections import Counter  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.core import compile_plan  # noqa: E402
+from repro.core.distributed import build_sharded_tick  # noqa: E402
+from repro.core.engine import build_tick  # noqa: E402
+from repro.core.join import JoinBackend  # noqa: E402
+from repro.core.multi import SlotTickCache  # noqa: E402
+from repro.core.share import (  # noqa: E402
+    SharedPrefixForest,
+    shared_current_matches,
+)
+from repro.core.state import init_state, make_batch  # noqa: E402
+from repro.runtime import (  # noqa: E402
+    ContinuousSearchService,
+    ShardedSearchService,
+)
+from repro.stream.generator import to_batches  # noqa: E402
+
+from test_engine_oracle import small_stream  # noqa: E402
+from test_service_restore import event_key, oracle_reported  # noqa: E402
+from test_share import (  # noqa: E402
+    CAP,
+    SERVE,
+    W,
+    chain2,
+    chain2_other_labels,
+    chain3,
+    fork,
+    tri,
+)
+
+QUERIES = [chain3(), chain2(), chain2(), chain2_other_labels(), fork(),
+           tri()]
+
+
+def stream160(seed=5):
+    return small_stream(160, n_vertices=8, n_vertex_labels=3, seed=seed)
+
+
+def reported(svc, stream, **serve):
+    events = []
+
+    def on_match(qid, bindings, ets):
+        plan = svc.registry.get(qid).plan
+        for b, t in zip(bindings, ets):
+            events.append((qid, event_key(plan, b, t)))
+
+    svc.serve_stream(stream, on_match=on_match, **SERVE, **serve)
+    return Counter(events)
+
+
+def drive_with_churn(svc, stream):
+    """Register all queries, serve half, churn (2 leave, 1 arrives),
+    serve the rest.  Returns (multiset of reports, final qids)."""
+    qids = [svc.register(q, W) for q in QUERIES]
+    half = 80
+    count = reported(svc, stream[:half])
+    svc.unregister(qids[1])          # a chain2 tenant leaves
+    svc.unregister(qids[4])          # the fork tenant leaves
+    late = svc.register(chain2(), W)   # fresh epoch mid-stream
+    count += reported(svc, stream[half:])
+    live = [qids[0], qids[2], qids[3], qids[5], late]
+    return count, live, half
+
+
+def check_mesh_differential():
+    stream = stream160()
+    ref = ContinuousSearchService(
+        slots_per_group=4, tick_cache=SlotTickCache(),
+        enable_sharing=True, **CAP)
+    count_ref, live_ref, half = drive_with_churn(ref, stream)
+
+    for n_replicas, spr in ((1, 8), (2, 4), (8, 1)):
+        svc = ShardedSearchService(
+            n_replicas=n_replicas, slots_per_replica=spr,
+            tick_cache=SlotTickCache(), enable_sharing=True, **CAP)
+        count, live, _ = drive_with_churn(svc, stream)
+        assert count and count == count_ref, (
+            n_replicas, len(count), len(count_ref))
+        for qid_m, qid_r in zip(live, live_ref):
+            assert svc.matches(qid_m) == ref.matches(qid_r), (
+                n_replicas, qid_m)
+        # oracle anchor for the mid-stream tenant: exactly the suffix
+        want_reported, want_window = oracle_reported(
+            chain2(), W, stream[half:])
+        got = {k for (q, k) in count if q == live[-1]}
+        assert got == want_reported, n_replicas
+        assert svc.matches(live[-1]) == want_window
+        # every replica really advanced the shared clock
+        stats = svc.last_mesh_stats()
+        assert stats and all(s["t_clock"] > 0 for s in stats.values())
+    print("mesh differential ok", sum(count_ref.values()))
+
+
+def check_crash_restore_and_reshard(tmpdir):
+    stream = stream160(seed=7)
+    tc = SlotTickCache()
+
+    # uninterrupted sharded reference
+    svc_a = ShardedSearchService(
+        n_replicas=8, slots_per_replica=1, tick_cache=tc,
+        enable_sharing=True, compact_every=4, **CAP)
+    qids = [svc_a.register(q, W) for q in QUERIES]
+    count_a = reported(svc_a, stream)
+
+    def interrupted(restore_kwargs, sub):
+        ckpt = os.path.join(tmpdir, sub)
+        svc_b = ShardedSearchService(
+            n_replicas=8, slots_per_replica=1, tick_cache=tc,
+            enable_sharing=True, ckpt_dir=ckpt, compact_every=4, **CAP)
+        for q in QUERIES:
+            svc_b.register(q, W)
+        count = reported(svc_b, stream[:96], ckpt_every=2)
+        del svc_b                                   # "crash"
+        before = tc.n_builds
+        svc_c = ShardedSearchService.restore(ckpt, tick_cache=tc,
+                                             **restore_kwargs)
+        rebuilds = tc.n_builds - before
+        count += reported(svc_c, stream[svc_c.n_edges_ingested:])
+        return count, svc_c, rebuilds
+
+    # same mesh size: exact layout, zero warm rebuilds
+    count_same, svc_same, rebuilds = interrupted({}, "same")
+    assert rebuilds == 0, rebuilds
+    assert svc_same.n_replicas == 8
+    assert count_same == count_a, (len(count_same), len(count_a))
+
+    # resharded restore: 8-replica checkpoint onto a 2-replica mesh
+    count_re, svc_re, _ = interrupted({"n_replicas": 2}, "reshard")
+    assert svc_re.n_replicas == 2
+    assert svc_re.slots_per_replica == 1
+    assert count_re == count_a, (len(count_re), len(count_a))
+    for qid, q in zip(qids, QUERIES):
+        assert svc_re.matches(qid) == svc_a.matches(qid), qid
+    # the repack respected the new mesh: every slot index < 2*spr
+    assert all(k < 2 * svc_re.slots_per_replica
+               for _, k in svc_re._location.values())
+    print("crash/restore + reshard ok", sum(count_a.values()))
+
+
+def check_placement():
+    svc = ShardedSearchService(
+        n_replicas=8, slots_per_replica=2, tick_cache=SlotTickCache(),
+        **CAP)
+    for _ in range(8):
+        svc.register(chain2(), W)
+    assert svc.replica_load() == [1] * 8          # round-robin spread
+    svc.register(chain2(), W)
+    assert sorted(svc.replica_load()) == [1] * 7 + [2]
+
+    lb = ShardedSearchService(
+        n_replicas=4, slots_per_replica=4, tick_cache=SlotTickCache(),
+        placement="load_balanced", **CAP)
+    for _ in range(6):
+        lb.register(chain2(), W)
+    # zero pressure everywhere -> pure tenant-count balancing
+    assert sorted(lb.replica_load()) == [1, 1, 2, 2]
+    try:
+        ShardedSearchService(placement="nope", tick_cache=SlotTickCache())
+        raise AssertionError("unknown placement accepted")
+    except ValueError:
+        pass
+    print("placement ok")
+
+
+def _prefix_lift_one(stream, plan, mesh, use_parent):
+    """One fresh forest, one depth: unsharded vs capacity-sharded tick
+    consuming the SAME replicated prefix view."""
+    tc = SlotTickCache()
+    forest = SharedPrefixForest(tc, backend=JoinBackend.REF, jit=True,
+                                donate=False)
+    leaf = forest.acquire(plan, epoch=0)
+    node = leaf.parent if use_parent else leaf
+    depth = node.depth
+    tick1 = jax.jit(build_tick(plan, prefix_depth=depth))
+    s1 = init_state(plan, depth)
+    tickN, sN = build_sharded_tick(plan, mesh, axes=("data",),
+                                   extract_matches=True,
+                                   prefix_depth=depth)
+    total1 = totalN = 0
+    for b in to_batches(stream, 16):
+        batch = make_batch(**b)
+        views, _ = forest.advance(batch)
+        view = views[node.pid]
+        s1, r1 = tick1(s1, batch, view)
+        sN, rN = tickN(sN, batch, view)
+        total1 += int(r1.n_new_matches)
+        totalN += int(rN.n_new_matches)
+    assert total1 == totalN > 0, (depth, total1, totalN)
+    assert int(s1.stats.n_overflow) == int(sN.stats.n_overflow)
+    m1 = shared_current_matches(plan, node, forest, jax.device_get(s1))
+    mN = shared_current_matches(plan, node, forest, jax.device_get(sN))
+    assert m1 == mN, depth
+
+
+def check_capacity_sharded_prefix():
+    """Engine-level lift: capacity-axis shard_map x shared prefix view.
+
+    Full prefix (whole subquery-0 chain shared -> the replicated-table
+    ownership path through L0/emission) and partial prefix (suffix
+    joins against a replicated parent view) both lift.
+    """
+    stream = stream160(seed=5)
+    plan = compile_plan(chain3(), W, **CAP)
+    mesh = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4])
+    _prefix_lift_one(stream, plan, mesh, use_parent=False)
+    _prefix_lift_one(stream, plan, mesh, use_parent=True)
+    print("capacity-sharded prefix ok")
+
+
+def main():
+    import tempfile
+
+    assert len(jax.devices()) == 8, jax.devices()
+    check_mesh_differential()
+    with tempfile.TemporaryDirectory() as tmpdir:
+        check_crash_restore_and_reshard(tmpdir)
+    check_placement()
+    check_capacity_sharded_prefix()
+    print("MESH-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -56,6 +56,30 @@ def test_lint_fixture_golden_findings():
     assert stats["n_traced_functions"] >= 6
 
 
+def test_lint_recognizes_aliased_shard_map_roots(tmp_path):
+    """The compat shim imports ``shard_map as _shard_map``; functions
+    handed to the alias must still become traced roots (TRC-checked)
+    and be counted in the ``n_shard_map_roots`` census."""
+    (tmp_path / "m.py").write_text(
+        "from repro.core.compat import shard_map as _shard_map\n"
+        "def serve(mesh):\n"
+        "    def body(x):\n"
+        "        return int(x) + 1\n"
+        "    return _shard_map(body, mesh=mesh, in_specs=(None,),\n"
+        "                      out_specs=None)\n")
+    findings, stats = lint_tree(str(tmp_path))
+    assert stats["n_shard_map_roots"] == 1
+    assert any(f.rule == "TRC101" and "body" in f.symbol
+               for f in findings)
+
+
+def test_mesh_tick_builder_is_trc_covered():
+    """The mesh subsystem's shard_map-wrapped tick builder is inside the
+    linted tree's traced-root census — the TRC rules see it."""
+    _, stats = lint_tree(SRC_REPRO)
+    assert stats["n_shard_map_roots"] >= 1
+
+
 def test_lint_tree_clean_at_error_severity():
     """Satellite contract: the real tree has zero error findings and
     every warning is covered by the shipped baseline."""

@@ -258,6 +258,46 @@ def test_session_checkpoint_restore_roundtrip(tmp_path):
         assert sr.matches() == sa.matches()
 
 
+def test_mesh_session_matches_plain_session(tmp_path):
+    """``StreamSession(mesh=...)`` serves through the replica-sharded
+    service: same delivered multiset as the plain session, and a sharded
+    checkpoint restores back onto the mesh path with the full typed
+    surface intact."""
+    from repro.runtime.mesh import ShardedSearchService
+
+    events = traffic(160, seed=21)
+    serve = dict(batch_size=16)
+
+    plain = StreamSession(slots_per_group=4, tick_cache=SlotTickCache(),
+                          **CAP)
+    sub_p = plain.register(chain_pattern())
+    plain.ingest(events, **serve)
+    want = Counter(match_key(sub_p, m) for m in sub_p.drain())
+
+    tc = SlotTickCache()
+    sess = StreamSession(mesh={"n_replicas": 1, "slots_per_replica": 4},
+                         ckpt_dir=str(tmp_path), tick_cache=tc, **CAP)
+    assert isinstance(sess.service, ShardedSearchService)
+    sub = sess.register(chain_pattern())
+    sess.ingest(events, **serve)
+    got = Counter(match_key(sub, m) for m in sub.drain())
+    assert got == want and want
+    sess.checkpoint()
+    sess.close()
+    del sess                                     # crash
+
+    sess_r = StreamSession.restore(str(tmp_path), tick_cache=tc)
+    assert isinstance(sess_r.service, ShardedSearchService)
+    assert sess_r.service.n_replicas == 1
+    (sub_r,) = sess_r.subscriptions()
+    assert sub_r.plan == sub.plan
+    assert sub_r.matches() == sub_p.matches()
+
+    # the shorthand: an int is the replica count
+    sess_i = StreamSession(mesh=1, tick_cache=SlotTickCache(), **CAP)
+    assert isinstance(sess_i.service, ShardedSearchService)
+
+
 def test_restore_refuses_non_session_checkpoints(tmp_path):
     """A raw service checkpoint (no api state) must not silently restore
     as an untyped session."""

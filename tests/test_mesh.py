@@ -1,0 +1,322 @@
+"""Replica-sharded serving (repro.runtime.mesh) + incremental/sharded
+checkpoints (repro.checkpoint).
+
+The multi-device half runs in a subprocess (device count must be set
+before jax initializes; the main process keeps seeing 1 device):
+tests/_mesh_check.py proves sharded == single-device == oracle on 1-,
+2- and 8-replica meshes with prefix sharing and churn, crash/restore
+through sharded checkpoints (same mesh and 8 -> 2 reshard, zero warm
+rebuilds on same-mesh restore), placement policies, and the engine-level
+capacity-sharding x prefix-sharing lift.
+
+The in-process half covers the mesh-independent substrate on one
+device: manifest patch algebra, O(churn) incremental manifests, the
+torn-delta-chain fallback (loud, counted), per-replica npz shard
+write/validate/reassembly, delta-chain-aware pruning, and single-replica
+service parity.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointError,
+    apply_patch,
+    checkpoint_steps,
+    dict_diff,
+    load_resolved_manifest,
+    prune_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+    validate_checkpoint,
+)
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.core import compile_plan
+from repro.core.multi import SlotTickCache
+from repro.core.share import SharedPrefixForest
+from repro.runtime import ContinuousSearchService, ShardedSearchService
+from repro.stream.generator import to_batches
+
+from test_engine_oracle import small_stream
+from test_share import CAP, W, chain2, chain3
+
+
+# --------------------------------------------------------------------- #
+# multi-device differential (subprocess: 8 virtual CPU devices)
+# --------------------------------------------------------------------- #
+def test_mesh_parity_multi_device():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root / "src"), str(root / "tests")])
+    proc = subprocess.run(
+        [sys.executable, str(root / "tests" / "_mesh_check.py")],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "MESH-OK" in proc.stdout
+
+
+# --------------------------------------------------------------------- #
+# manifest patch algebra
+# --------------------------------------------------------------------- #
+def test_dict_diff_apply_patch_roundtrip():
+    cases = [
+        ({}, {}),
+        ({"a": 1}, {"a": 1}),
+        ({"a": 1}, {"a": 2}),
+        ({"a": 1}, {}),                           # delete
+        ({}, {"a": 1}),                           # insert
+        ({"a": {"b": 1, "c": 2}}, {"a": {"b": 1, "c": 3}}),   # nested
+        ({"a": {"b": 1}}, {"a": 5}),              # dict -> scalar
+        ({"a": 5}, {"a": {"b": 1}}),              # scalar -> dict
+        ({"a": {"b": 1}}, {"a": {"c": 2}}),       # key swap inside
+        ({"q": {"1": {"w": 5}, "2": {"w": 6}}},
+         {"q": {"1": {"w": 5}, "3": {"w": 7}}}),  # churn shape
+        ({"x": [1, 2]}, {"x": [1, 2, 3]}),        # lists are atomic
+        ({"x": None}, {"x": {"y": False}}),
+    ]
+    for old, new in cases:
+        patch = dict_diff(old, new)
+        assert apply_patch(old, patch) == new, (old, new, patch)
+        # JSON round-trip safety: the patch format must survive the
+        # manifest serialization it rides in
+        assert apply_patch(old, json.loads(json.dumps(patch))) == new
+    assert dict_diff({"a": 1, "b": {"c": 2}}, {"a": 1, "b": {"c": 2}}) == {}
+
+
+# --------------------------------------------------------------------- #
+# incremental manifests: O(churn) bytes, resolved == full
+# --------------------------------------------------------------------- #
+def _tenant_service(tmp_path, n_tenants, compact_every, tc=None):
+    svc = ContinuousSearchService(
+        slots_per_group=8, tick_cache=tc or SlotTickCache(),
+        ckpt_dir=str(tmp_path), compact_every=compact_every,
+        level_capacity=64, l0_capacity=64, max_new=32)
+    qids = [svc.register(chain2(), W) for _ in range(n_tenants)]
+    return svc, qids
+
+
+def test_incremental_manifest_is_o_churn(tmp_path):
+    svc, qids = _tenant_service(tmp_path, 40, compact_every=16)
+    svc.checkpoint()                       # step 1: compacted base
+    svc.ckpt.wait()
+    base_size = os.path.getsize(tmp_path / "step_1.json")
+    man1 = json.load(open(tmp_path / "step_1.json"))
+    assert "service" in man1 and "service_delta" not in man1
+
+    # one churn event per step: delta bytes track the CHURN, not the
+    # 40-tenant registry
+    live = list(qids)
+    delta_sizes = []
+    for step in (2, 3, 4):
+        svc.unregister(live.pop(step))
+        live.append(svc.register(chain2(), W))
+        svc.checkpoint()
+        svc.ckpt.wait()
+        man = json.load(open(tmp_path / f"step_{step}.json"))
+        assert "service" not in man
+        assert man["service_delta"]["prev"] == step - 1
+        delta_sizes.append(os.path.getsize(tmp_path / f"step_{step}.json"))
+    assert max(delta_sizes) * 5 < base_size, (delta_sizes, base_size)
+
+    # the replayed chain resolves to exactly the live manifest
+    assert load_resolved_manifest(str(tmp_path), 4, "service") == \
+        svc._manifest()
+
+    # restore from the delta head round-trips the registry
+    svc2 = ContinuousSearchService.restore(
+        str(tmp_path), tick_cache=svc.tick_cache)
+    assert sorted(svc2.registry.qids()) == sorted(live)
+    assert svc2.compact_every == 16
+    assert {q: svc2._location[q][1] for q in live} == \
+        {q: svc._location[q][1] for q in live}
+
+
+def test_compaction_restarts_the_chain(tmp_path):
+    svc, qids = _tenant_service(tmp_path, 4, compact_every=3)
+    for _ in range(7):
+        svc.checkpoint()
+    svc.ckpt.wait()
+    kinds = ["service" if "service" in json.load(
+        open(tmp_path / f"step_{s}.json")) else "delta"
+        for s in checkpoint_steps(str(tmp_path))]
+    # K=3: base, 2 deltas, base, 2 deltas, base
+    assert kinds == ["service", "delta", "delta"] * 2 + ["service"]
+
+
+def test_torn_delta_chain_falls_back_loudly(tmp_path):
+    svc, qids = _tenant_service(tmp_path, 6, compact_every=3)
+    svc.checkpoint()                        # 1: base
+    for step in (2, 3):                     # 2,3: deltas on 1
+        svc.unregister(qids[step])
+        svc.checkpoint()
+    svc.checkpoint()                        # 4: base (chain restarts)
+    svc.unregister(qids[4])
+    svc.checkpoint()                        # 5: delta on 4
+    svc.ckpt.wait()
+
+    os.remove(tmp_path / "step_4.json")     # tear the newest chain's base
+    before = ckpt_mod.N_DELTA_FALLBACKS
+    with pytest.warns(UserWarning, match="delta chain torn"):
+        svc2 = ContinuousSearchService.restore(
+            str(tmp_path), tick_cache=svc.tick_cache)
+    assert ckpt_mod.N_DELTA_FALLBACKS == before + 1
+    # steps 5 and 4 are unusable; 3 resolves through its intact chain
+    assert svc2._ckpt_step == 3
+    assert sorted(svc2.registry.qids()) == sorted(
+        q for q in qids if q not in (qids[2], qids[3]))
+
+
+# --------------------------------------------------------------------- #
+# sharded npz substrate
+# --------------------------------------------------------------------- #
+def _toy_tree():
+    return {
+        "0": {"table": np.arange(24, dtype=np.int32).reshape(8, 3),
+              "clock": np.int32(7)},
+        "prefix0": {"bind": np.full((5, 2), 3, np.int32)},
+    }
+
+
+def test_sharded_checkpoint_roundtrip(tmp_path):
+    tree = _toy_tree()
+    save_checkpoint(str(tmp_path), 3, tree, extra={"tag": "mesh"},
+                    n_shards=4, replicated=("prefix0",))
+    assert not (tmp_path / "step_3.npz").exists()
+    for r in range(4):
+        assert (tmp_path / f"step_3.shard{r}of4.npz").exists()
+    assert checkpoint_steps(str(tmp_path)) == [3]
+    validate_checkpoint(str(tmp_path), 3)
+
+    # sharded keys split along axis 0; replicated + scalars sit in shard 0
+    shard0 = np.load(tmp_path / "step_3.shard0of4.npz")
+    shard1 = np.load(tmp_path / "step_3.shard1of4.npz")
+    assert shard0["0::table"].shape == (2, 3)
+    assert "prefix0::bind" in shard0.files
+    assert "prefix0::bind" not in shard1.files
+    assert "0::clock" in shard0.files and "0::clock" not in shard1.files
+
+    like = jax_zeros_like(tree)
+    restored = restore_checkpoint(str(tmp_path), 3, like)
+    np.testing.assert_array_equal(restored["0"]["table"], tree["0"]["table"])
+    np.testing.assert_array_equal(restored["prefix0"]["bind"],
+                                  tree["prefix0"]["bind"])
+    assert int(restored["0"]["clock"]) == 7
+
+
+def jax_zeros_like(tree):
+    import jax
+
+    return jax.tree.map(np.zeros_like, tree)
+
+
+def test_sharded_checkpoint_detects_torn_shard(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _toy_tree(), n_shards=2,
+                    replicated=("prefix0",))
+    validate_checkpoint(str(tmp_path), 1)
+    path = tmp_path / "step_1.shard1of2.npz"
+    path.write_bytes(path.read_bytes()[:-7])        # torn tail
+    with pytest.raises(CheckpointError, match="shard"):
+        validate_checkpoint(str(tmp_path), 1)
+    os.remove(path)
+    with pytest.raises(CheckpointError, match="missing shard"):
+        validate_checkpoint(str(tmp_path), 1)
+
+
+def test_sharded_checkpoint_rejects_indivisible_axis(tmp_path):
+    with pytest.raises(ValueError, match="not divisible"):
+        save_checkpoint(str(tmp_path), 1,
+                        {"a": np.zeros((5, 2), np.int32)}, n_shards=2)
+
+
+def test_prune_keeps_referenced_delta_manifests(tmp_path):
+    arrs = {"a": np.zeros((4,), np.int32)}
+    save_checkpoint(str(tmp_path), 1, arrs, extra={"svc": {"x": 1}})
+    for s in (2, 3, 4):
+        save_checkpoint(
+            str(tmp_path), s, arrs,
+            extra={"svc_delta": {"prev": s - 1, "patch": {"x": s}}})
+    pruned = prune_checkpoints(str(tmp_path), keep_last=1)
+    assert pruned == [1, 2, 3]
+    # arrays of pruned steps are gone, but the kept step's delta chain
+    # still resolves through the surviving manifests
+    for s in (1, 2, 3):
+        assert not (tmp_path / f"step_{s}.npz").exists()
+        assert (tmp_path / f"step_{s}.json").exists()
+    assert load_resolved_manifest(str(tmp_path), 4, "svc") == {"x": 4}
+    # once nothing references them, a later prune drops the manifests
+    save_checkpoint(str(tmp_path), 5, arrs, extra={"svc": {"x": 5}})
+    prune_checkpoints(str(tmp_path), keep_last=1)
+    for s in (1, 2, 3, 4):
+        assert not (tmp_path / f"step_{s}.json").exists()
+
+
+# --------------------------------------------------------------------- #
+# single-replica mesh service (in-process: 1 CPU device)
+# --------------------------------------------------------------------- #
+def test_single_replica_service_matches_base():
+    stream = small_stream(120, n_vertices=8, n_vertex_labels=3, seed=5)
+    base = ContinuousSearchService(
+        slots_per_group=2, tick_cache=SlotTickCache(), **CAP)
+    mesh = ShardedSearchService(
+        n_replicas=1, slots_per_replica=2, tick_cache=SlotTickCache(),
+        **CAP)
+    queries = [chain3(), chain2(), chain2()]
+    qb = [base.register(q, W) for q in queries]
+    qm = [mesh.register(q, W) for q in queries]
+    assert qb == qm
+    totals_b = {q: 0 for q in qb}
+    totals_m = dict(totals_b)
+    for b in to_batches(stream, 16):
+        out_b, out_m = base.ingest(b), mesh.ingest(b)
+        for q in qb:
+            totals_b[q] += int(out_b[q].n_new_matches)
+            totals_m[q] += int(out_m[q].n_new_matches)
+    assert totals_b == totals_m
+    for q in qb:
+        assert base.matches(q) == mesh.matches(q)
+    assert mesh.replica_load() == [3]
+    assert mesh.replica_pressure() == [0]
+    stats = mesh.last_mesh_stats()
+    assert set(stats) == {g.gid for g in mesh._iter_groups()}
+    assert all(s["t_clock"] > 0 for s in stats.values())
+    # mesh config replaces slots_per_group in the manifest
+    cfg = mesh._manifest()["config"]
+    assert "slots_per_group" not in cfg
+    assert cfg["mesh"] == {"n_replicas": 1, "slots_per_replica": 2,
+                           "placement": "round_robin"}
+
+
+def test_mesh_service_rejects_bad_config():
+    with pytest.raises(ValueError, match="n_replicas"):
+        ShardedSearchService(n_replicas=99, tick_cache=SlotTickCache())
+    with pytest.raises(ValueError, match="placement"):
+        ShardedSearchService(n_replicas=1, placement="nope",
+                             tick_cache=SlotTickCache())
+
+
+# --------------------------------------------------------------------- #
+# replica-aware forest refcount partition
+# --------------------------------------------------------------------- #
+def test_replica_refcounts_partition():
+    tc = SlotTickCache()
+    forest = SharedPrefixForest(tc, jit=False, donate=False)
+    p3 = compile_plan(chain3(), W, **CAP)
+    p2 = compile_plan(chain2(), W, **CAP)
+    a = forest.acquire(p3, epoch=0)     # depth-3 leaf
+    b = forest.acquire(p2, epoch=0)     # depth-2 leaf, shares a's chain
+    c = forest.acquire(p2, epoch=0)     # second tenant on b's leaf
+    assert b is c
+    parts = forest.replica_refcounts([(a, 0), (b, 1), (c, 1)], 2)
+    for node in forest.nodes():
+        assert sum(parts[node.pid]) == node.refcount, node.pid
+    assert parts[a.pid] == [1, 0]                  # depth-3: only a
+    assert parts[b.pid] == [1, 2]                  # depth<=2: a + b + c
