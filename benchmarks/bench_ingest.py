@@ -31,6 +31,7 @@ import jax
 from repro.core.join import JoinBackend
 from repro.core.multi import SlotTickCache
 from repro.core.query import QueryGraph
+from repro.obs import percentile
 from repro.runtime.fault import RetryPolicy
 from repro.runtime.service import ContinuousSearchService
 from repro.stream.generator import (
@@ -98,10 +99,8 @@ def bench_cell(backend: str, disorder_frac: float, n_edges: int,
     wall = time.perf_counter() - t0
 
     s = fr.stats()
-    lat_sorted = sorted(lat)
-    pick = lambda q: round(
-        lat_sorted[min(len(lat_sorted) - 1, int(q * len(lat_sorted)))], 3) \
-        if lat_sorted else 0.0
+    # the shared nearest-rank helper — same math every obs surface uses
+    pick = lambda q: round(percentile(lat, q), 3)
     return {
         "bench": "ingest_frontier",
         "backend": backend,

@@ -95,6 +95,7 @@ def _tick_rows(replicas, spr, n_edges, batch):
 
     from repro.core.join import JoinBackend
     from repro.core.multi import SlotTickCache
+    from repro.obs import percentile
     from repro.runtime import ContinuousSearchService, ShardedSearchService
     from repro.stream.generator import StreamConfig, synth_traffic_stream
 
@@ -128,7 +129,6 @@ def _tick_rows(replicas, spr, n_edges, batch):
             svc.register(_chain3(), WINDOW)
         lat, wall, edges = _serve_timed(svc, stream, batch)
         mean = sum(lat) / max(1, len(lat))
-        srt = sorted(lat)
         rows.append({
             "bench": "mesh_tick",
             "n_replicas": r,
@@ -140,7 +140,7 @@ def _tick_rows(replicas, spr, n_edges, batch):
             "edges_per_s": round(edges / wall, 1),
             "tenant_edges_per_s": round(r * spr * edges / wall, 1),
             "ms_per_tick_mean": round(mean, 3),
-            "ms_per_tick_p50": round(srt[len(srt) // 2], 3) if srt else 0.0,
+            "ms_per_tick_p50": round(percentile(lat, 0.5), 3),
             "ms_per_tick_per_replica": round(mean / r, 3),
         })
         parity.append({

@@ -1,0 +1,303 @@
+"""End-to-end serve-loop load benchmark: recorded-traffic replay through
+the FULL production path, instrumented vs bare.
+
+``BENCH_ingest.json`` scores the ingress path and ``BENCH_mesh.json``
+the replica-sharded tick; this benchmark closes ROADMAP item 5 by
+replaying recorded traffic — seeded background streams from
+``stream/generator.py`` with the cybersec C2 exfiltration chains of
+``examples/cybersec_c2_detection.py`` planted into them — through every
+production layer at once: multi-source disordered delivery ->
+``IngestFrontier`` (dedup + k-way merge + watermark) -> adaptive
+``TickCoalescer`` -> sharded slot groups with ``enable_sharing=True``
+(two identical C2 tenants CSE onto one prefix) -> async checkpoints on
+a fixed cadence.
+
+Each backend runs the SAME replay twice: bare (``obs=None``, the
+default-off path) and instrumented (``MetricsRegistry`` + ``Tracer``
+writing span JSONL).  The pair yields the zero-cost-when-off evidence
+the obs layer promises:
+
+* ``obs_overhead_ratio`` — instrumented wall / bare wall;
+* ``extra_jit_builds`` — ``SlotTickCache.n_builds`` delta across the
+  instrumented run (must be 0: metrics never add an XLA trace);
+* ``matches_equal`` — per-qid match multisets identical on/off;
+* p50/p99 tick latency DOGFOODED from the obs histogram on the
+  instrumented row vs ``repro.obs.percentile`` over ``on_tick``
+  latencies on the bare row — same nearest-rank math, two surfaces.
+
+Every planted attack must be found (``n_attacks_found``), and the row
+embeds watermark lag, checkpoint count and async-checkpoint stall time.
+
+Output: ``BENCH_serve.json`` at the repo root (schema
+``bench_serve/v1``).  ``--dry`` emits the same schema at tiny scale
+(the CI smoke gate).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core.join import JoinBackend
+from repro.core.multi import SlotTickCache
+from repro.core.oracle import DataEdge
+from repro.core.query import QueryGraph
+from repro.obs import MetricsRegistry, Tracer, percentile, summarize_trace
+from repro.runtime.fault import RetryPolicy
+from repro.runtime.service import ContinuousSearchService
+from repro.stream.generator import (
+    DisorderConfig, StreamConfig, disordered_sources, synth_traffic_stream)
+from repro.stream.ingest import IngestFrontier, ScriptedSource
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_serve.json")
+
+CAP = dict(level_capacity=512, l0_capacity=512, max_new=128)
+WINDOW = 60
+
+# the Figure-1 exfiltration pattern (examples/cybersec_c2_detection.py),
+# replicated at engine level so the benchmark has no example dependency.
+# vertex labels 0=victim 1=web 2=malware 3=C&C; edge labels are ports.
+VICTIM, WEB, MAL, CC = 0, 1, 2, 3
+HTTP, DL, REG, CMD, EXFIL = 0, 1, 2, 3, 4
+
+
+def _attack_query() -> QueryGraph:
+    return QueryGraph(
+        n_vertices=5,
+        vertex_labels=(VICTIM, WEB, MAL, CC, CC),
+        edges=((0, 1), (2, 0), (0, 3), (3, 0), (0, 4)),
+        edge_labels=(HTTP, DL, REG, CMD, EXFIL),
+        prec=frozenset({(0, 1), (1, 2), (2, 3), (3, 4)}),
+    )
+
+
+def _chain_query() -> QueryGraph:
+    # a cheap background tenant: http fetch followed by a download
+    return QueryGraph(3, (VICTIM, WEB, MAL), ((0, 1), (2, 1)),
+                      edge_labels=(HTTP, DL), prec=frozenset({(0, 1)}))
+
+
+def _plant_attacks(stream, n_attacks: int, n_vertices: int, rng):
+    """Insert timing-ordered C2 chains into the background traffic."""
+    out = list(stream)
+    lo, hi = out[0].ts, out[-1].ts
+    for _ in range(n_attacks):
+        v, w, m, c, c2 = rng.choice(n_vertices, 5, replace=False) + n_vertices
+        t0 = int(rng.integers(lo + 5, hi - 20))
+        out.extend([
+            DataEdge(int(v), int(w), t0, VICTIM, WEB, HTTP),
+            DataEdge(int(m), int(v), t0 + 3, MAL, VICTIM, DL),
+            DataEdge(int(v), int(c), t0 + 7, VICTIM, CC, REG),
+            DataEdge(int(c), int(v), t0 + 11, CC, VICTIM, CMD),
+            DataEdge(int(v), int(c2), t0 + 15, VICTIM, CC, EXFIL),
+        ])
+    out.sort(key=lambda e: e.ts)
+    return out
+
+
+def _frontier(stream, n_sources: int):
+    cfg = DisorderConfig(n_sources=n_sources, disorder_frac=0.01,
+                         max_delay=8, seed=23)
+    scripts = disordered_sources(stream, cfg)
+    return IngestFrontier(
+        [ScriptedSource(f"s{i}", sc) for i, sc in enumerate(scripts)],
+        allowed_lateness=64, sleep=lambda d: None,
+        retry=RetryPolicy(base_delay_s=0.0, jitter_frac=0.0))
+
+
+def _replay(backend: str, traffic, batch: int, n_sources: int,
+            ckpt_every: int, tc: SlotTickCache, instrumented: bool):
+    """One full-path run.  Returns the raw measurements for a row."""
+    obs = MetricsRegistry() if instrumented else None
+    trace_path = None
+    tracer = None
+    tmp = tempfile.TemporaryDirectory()
+    if instrumented:
+        trace_path = os.path.join(tmp.name, "trace.jsonl")
+        tracer = Tracer(trace_path)
+    svc = ContinuousSearchService(
+        slots_per_group=4, backend=backend, tick_cache=tc,
+        enable_sharing=True, ckpt_dir=tmp.name, compact_every=4,
+        obs=obs, tracer=tracer, **CAP)
+    # two identical C2 tenants (shared prefix) + one background chain
+    c2_qids = [svc.register(_attack_query(), WINDOW),
+               svc.register(_attack_query(), WINDOW)]
+    svc.register(_chain_query(), WINDOW)
+
+    lat: list[float] = []
+    gauges = {"watermark_lag": 0}
+    matches: dict[tuple, int] = {}
+
+    def on_tick(i):
+        lat.append(i.latency_ms)
+        gauges["watermark_lag"] = max(gauges["watermark_lag"],
+                                      i.watermark_lag)
+
+    def on_match(qid, bindings, ets):
+        for row in np.asarray(bindings):
+            key = (qid, tuple(int(b) for b in row))
+            matches[key] = matches.get(key, 0) + 1
+
+    serve = dict(batch_size=batch, min_batch=batch, max_batch=batch,
+                 on_tick=on_tick, on_match=on_match)
+    builds_before = tc.n_builds
+    fr = _frontier(traffic, n_sources)
+    t0 = time.perf_counter()
+    svc.serve_frontier(fr, ckpt_every=ckpt_every, **serve)
+    svc.ckpt.wait()
+    wall = time.perf_counter() - t0
+
+    n_attacks_found = sum(n for (qid, _), n in matches.items()
+                          if qid in c2_qids)
+    out = {
+        "wall_s": wall,
+        "lat": list(lat),
+        "n_ticks": len(lat),
+        "matches": dict(matches),
+        "n_attacks_found": n_attacks_found,
+        "watermark_lag_max": int(gauges["watermark_lag"]),
+        "extra_jit_builds": tc.n_builds - builds_before,
+        "n_late_dropped": int(fr.stats().n_late_dropped),
+        "ckpt_stall_s": round(svc.ckpt.stall_s, 4),
+    }
+    if instrumented:
+        tracer.flush()
+        tracer.close()
+        h = obs.histogram("tick.latency_ms")
+        out["obs_snapshot"] = obs.snapshot()
+        out["obs_p50"] = round(h.quantile(0.5), 3)
+        out["obs_p99"] = round(h.quantile(0.99), 3)
+        out["obs_hist_count"] = h.count
+        out["trace_summary"] = summarize_trace(trace_path)
+    tmp.cleanup()
+    return out
+
+
+def bench_pair(backend: str, traffic, batch: int, n_sources: int,
+               ckpt_every: int, n_attacks: int, n_edges: int) -> dict:
+    """Bare + instrumented replays of the same traffic on one backend,
+    sharing one SlotTickCache so the instrumented run's build delta is
+    the no-extra-XLA-traces proof.
+
+    The cache-warming pass replays the FULL traffic through a throwaway
+    service first: watermark-gated release makes the chunk-size sequence
+    ragged, so only an identical replay visits every traced shape — a
+    short ordered prefix would leave compiles inside the timed runs.
+    The jitted callables live in the shared ``SlotTickCache``, so both
+    timed runs below start fully warm."""
+    tc = SlotTickCache()
+    _replay(backend, traffic, batch, n_sources,
+            ckpt_every, tc, instrumented=False)
+    bare = _replay(backend, traffic, batch, n_sources,
+                   ckpt_every, tc, instrumented=False)
+    inst = _replay(backend, traffic, batch, n_sources,
+                   ckpt_every, tc, instrumented=True)
+
+    if inst["obs_hist_count"] != inst["n_ticks"]:
+        raise RuntimeError(
+            f"obs histogram saw {inst['obs_hist_count']} ticks, serve "
+            f"loop ran {inst['n_ticks']} — instrumentation lost data")
+    if bare["n_attacks_found"] < 2 * n_attacks:
+        raise RuntimeError(
+            f"only {bare['n_attacks_found']} attack matches for "
+            f"{n_attacks} planted chains x 2 tenants — full path "
+            f"dropped planted traffic")
+
+    tsumm = inst["trace_summary"]
+    return {
+        "bench": "serve_replay",
+        "backend": backend,
+        "batch": batch,
+        "n_sources": n_sources,
+        "n_edges": n_edges,
+        "n_attacks_planted": n_attacks,
+        "n_ticks": bare["n_ticks"],
+        # bare row: the production default (obs off)
+        "edges_per_s": round(n_edges / bare["wall_s"], 1),
+        "ms_per_tick_p50": round(percentile(bare["lat"], 0.5), 3),
+        "ms_per_tick_p99": round(percentile(bare["lat"], 0.99), 3),
+        "watermark_lag_max": bare["watermark_lag_max"],
+        "n_late_dropped": bare["n_late_dropped"],
+        "n_attacks_found": bare["n_attacks_found"],
+        "ckpt_stall_s": bare["ckpt_stall_s"],
+        # instrumented row: same replay with obs registry + span tracer
+        "instrumented": {
+            "edges_per_s": round(n_edges / inst["wall_s"], 1),
+            "ms_per_tick_p50": inst["obs_p50"],   # from the obs histogram
+            "ms_per_tick_p99": inst["obs_p99"],
+            "n_trace_spans": tsumm["n_spans"],
+            "n_trace_ticks": tsumm["n_ticks"],
+            "ckpt_stall_s": inst["ckpt_stall_s"],
+            "n_checkpoints": int(
+                inst["obs_snapshot"].get("ckpt.n_checkpoints", 0)),
+        },
+        # the zero-cost-when-off evidence
+        "obs_overhead_ratio": round(inst["wall_s"] / bare["wall_s"], 3),
+        "extra_jit_builds": inst["extra_jit_builds"],
+        "matches_equal": bare["matches"] == inst["matches"],
+    }
+
+
+def bench_serve_json(reduced: bool = True, dry: bool = False) -> str:
+    """Assemble and write ``BENCH_serve.json`` at the repo root."""
+    if dry:
+        n_bg, n_attacks, batch, n_sources, ckpt_every = 300, 3, 32, 2, 4
+    elif reduced:
+        n_bg, n_attacks, batch, n_sources, ckpt_every = 3000, 8, 64, 3, 8
+    else:
+        n_bg, n_attacks, batch, n_sources, ckpt_every = 12000, 12, 128, 4, 8
+
+    rng = np.random.default_rng(7)
+    background = synth_traffic_stream(StreamConfig(
+        n_edges=n_bg, n_vertices=200, n_vertex_labels=4,
+        n_edge_labels=5, seed=3, ts_step_max=1))
+    traffic = _plant_attacks(background, n_attacks, 200, rng)
+    n_edges = len(traffic)
+
+    backends = [JoinBackend.REF, JoinBackend.PALLAS_INTERPRET]
+    if jax.default_backend() == "tpu":
+        backends.append(JoinBackend.PALLAS)
+
+    results = [bench_pair(b, traffic, batch, n_sources,
+                          ckpt_every, n_attacks, n_edges)
+               for b in backends]
+    doc = {
+        "schema": "bench_serve/v1",
+        "mode": "dry" if dry else ("reduced" if reduced else "full"),
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "note": ("recorded-traffic replay (seeded background + planted "
+                 "C2 exfiltration chains) through the full path: "
+                 "disordered sources -> ingest frontier -> coalescer -> "
+                 "shared-prefix slot groups -> async checkpoints; each "
+                 "backend runs bare and instrumented, and the pair "
+                 "proves obs is free when off (no extra jit builds, "
+                 "identical match multisets) and cheap when on"),
+        "results": results,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# BENCH_serve.json -> {JSON_PATH} ({len(results)} rows)")
+    for r in results:
+        print(f"#   serve {r['backend']}: {r['edges_per_s']} e/s, "
+              f"p50 {r['ms_per_tick_p50']} ms, "
+              f"p99 {r['ms_per_tick_p99']} ms, "
+              f"obs overhead {r['obs_overhead_ratio']}x "
+              f"(+{r['extra_jit_builds']} builds), "
+              f"{r['n_attacks_found']} attack matches")
+    return JSON_PATH
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--dry", action="store_true")
+    args = ap.parse_args()
+    bench_serve_json(reduced=not args.full, dry=args.dry)

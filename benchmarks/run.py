@@ -17,8 +17,11 @@ tick cost and table bytes at N tenants × overlap fraction — see
 serving: per-replica tick cost vs replica count on an 8-virtual-device
 mesh plus full-vs-delta checkpoint manifest bytes — see
 ``benchmarks.bench_mesh``; self-spawns a subprocess so XLA_FLAGS can
-pin the device count before jax initializes) and
-``BENCH_analysis.json`` (static-analysis
+pin the device count before jax initializes), ``BENCH_serve.json``
+(full-path load: recorded-traffic replay with planted C2 attack chains
+through frontier + coalescer + shared-prefix groups + checkpoints, bare
+vs instrumented, proving the obs layer is free when off — see
+``benchmarks.bench_serve``) and ``BENCH_analysis.json`` (static-analysis
 coverage: files / pallas sites / plans verified and post-baseline
 findings per severity — see ``benchmarks.bench_analysis``).
 
@@ -43,6 +46,7 @@ from benchmarks import (
     bench_kernels,
     bench_mesh,
     bench_multiquery,
+    bench_serve,
     bench_service,
     bench_share,
 )
@@ -65,6 +69,7 @@ def main() -> None:
         bench_ingest.bench_ingest_json(reduced=True, dry=True)
         bench_share.bench_share_json(reduced=True, dry=True)
         bench_mesh.bench_mesh_json(reduced=True, dry=True)
+        bench_serve.bench_serve_json(reduced=True, dry=True)
         bench_analysis.bench_analysis_json(reduced=True, dry=True)
         print(f"# total bench wall time: {time.time() - t0:.1f}s")
         return
@@ -82,6 +87,7 @@ def main() -> None:
     bench_ingest.bench_ingest_json(reduced=reduced)   # BENCH_ingest.json
     bench_share.bench_share_json(reduced=reduced)     # BENCH_share.json
     bench_mesh.bench_mesh_json(reduced=reduced)       # BENCH_mesh.json
+    bench_serve.bench_serve_json(reduced=reduced)     # BENCH_serve.json
     bench_analysis.bench_analysis_json(reduced=reduced)  # BENCH_analysis.json
     bench_multiquery.main(                            # multi-tenant serving
         n_queries=6 if reduced else 12,

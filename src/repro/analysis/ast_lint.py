@@ -52,6 +52,15 @@ TRC106 warning  ``jax.jit`` wrapping a ``build_*tick*`` product without
                 ``donate_argnums`` — the tick threads its (large) state
                 through every call, so not donating doubles steady-state
                 table memory traffic.
+TRC107 error    ``repro.obs`` span/metric emission (``.span`` /
+                ``.record`` / ``.event`` / ``.observe`` / ``.inc`` /
+                ``.next_tick``) inside a traced function — a host
+                callback inside jit either fails to trace or silently
+                runs once at trace time; all instrumentation must stay
+                on the host side of the serve loop.  Only modules that
+                import ``repro.obs`` are checked (the attribute names
+                alone are too generic); the ``n_obs_sites`` census
+                counts every emission site tree-wide either way.
 
 Suppression: ``# analysis: ignore[TRC105]`` (or bare ``ignore``) on the
 flagged line; severities and the baseline workflow are described in
@@ -93,6 +102,11 @@ _KILL_CALLS = frozenset({"len", "range", "isinstance", "type", "repr",
                          "str", "enumerate"})
 _CAST_CALLS = frozenset({"int", "float", "bool"})
 _SYNC_ATTRS = frozenset({"tolist", "item", "block_until_ready"})
+# repro.obs emission attributes (TRC107 + the n_obs_sites census).
+# ``.set`` is deliberately excluded: too generic an attribute name to
+# attribute to the obs layer from syntax alone.
+_OBS_EMIT_ATTRS = frozenset({"span", "record", "event", "next_tick",
+                             "observe", "inc", "set_total"})
 
 
 @dataclass
@@ -693,6 +707,42 @@ class Linter:
                         f"input (cf. the PR-2 traced-window fix)")
                     break                         # one finding per capture
 
+    @staticmethod
+    def _imports_obs(mi: ModuleInfo) -> bool:
+        for ent in mi.imports.values():
+            if ent[0] == "module" and str(ent[1]).startswith("repro.obs"):
+                return True
+            if ent[0] == "from" and str(ent[1][0]).startswith("repro.obs"):
+                return True
+        return False
+
+    def _check_obs_sites(self, mi: ModuleInfo) -> int:
+        """TRC107 + census: ``repro.obs`` span/metric emission sites.
+
+        Only modules importing ``repro.obs`` are scanned (the emission
+        attribute names are too generic to attribute otherwise).
+        Returns the module's site count; sites inside a TRACED function
+        are host-callback-in-jit hazards and error."""
+        if not self._imports_obs(mi):
+            return 0
+        n_sites = 0
+        for fi in mi.functions.values():
+            for node in ast.walk(fi.node):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _OBS_EMIT_ATTRS):
+                    continue
+                n_sites += 1
+                if fi.traced:
+                    self._emit(
+                        mi, fi, node, "TRC107", ERROR,
+                        f"obs emission .{node.func.attr}() reachable "
+                        f"from a traced root — host callbacks inside "
+                        f"jit fail to trace or fire once at trace "
+                        f"time; hoist instrumentation out of the "
+                        f"traced computation")
+        return n_sites
+
     def _check_jit_donation(self, mi: ModuleInfo) -> None:
         """TRC106: jax.jit over a build_*tick* product, no donate_argnums."""
         for fi in mi.functions.values():
@@ -735,12 +785,14 @@ class Linter:
         for mi in self.modules.values():
             _mark_roots(mi)
         self._propagate()
+        n_obs_sites = 0
         for mi in self.modules.values():
             for fi in mi.functions.values():
                 if fi.traced:
                     self._check_traced_fn(mi, fi)
                 self._check_builder_closures(mi, fi)
             self._check_jit_donation(mi)
+            n_obs_sites += self._check_obs_sites(mi)
         self.findings.sort(key=lambda f: (f.path, f.line, f.rule))
         n_traced = sum(1 for mi in self.modules.values()
                        for fi in mi.functions.values() if fi.traced)
@@ -755,6 +807,10 @@ class Linter:
             "n_shard_map_roots": sum(
                 1 for mi in self.modules.values()
                 for fi in mi.functions.values() if fi.shard_map_root),
+            # repro.obs span/metric emission sites in obs-importing
+            # modules — all proven host-side (any one reachable from a
+            # traced root is a TRC107 error above)
+            "n_obs_sites": n_obs_sites,
         }
         return self.findings
 

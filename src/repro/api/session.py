@@ -57,6 +57,7 @@ from repro.checkpoint import CheckpointError
 from repro.core import join as J
 from repro.core.query import QueryGraph
 from repro.core.registry import plan_signature
+from repro.obs import MetricsRegistry, to_prometheus
 from repro.runtime.service import ContinuousSearchService
 from repro.runtime.straggler import TickCoalescer
 
@@ -247,6 +248,8 @@ class StreamSession:
         share_prefixes: bool = False,
         late_drop_threshold: float = 0.01,
         mesh: dict | int | None = None,
+        obs: MetricsRegistry | None = None,
+        tracer=None,
         _service: ContinuousSearchService | None = None,
     ):
         if _service is None:
@@ -276,6 +279,18 @@ class StreamSession:
                 _service = ContinuousSearchService(
                     slots_per_group=slots_per_group, **common)
         self.service = _service
+        # the session ALWAYS carries a metrics registry: status()/health
+        # read the registry's ``ingest.*`` counters instead of a live
+        # frontier's private ones, so drop-driven DEGRADED attribution
+        # survives checkpoint/restore (the registry reloads its counter
+        # history from the manifest) and both health paths — drop-rate
+        # and forced-gap — share one source of truth.
+        if self.service.obs is None:
+            self.service.obs = obs if obs is not None else MetricsRegistry()
+            self.service._register_obs_gauges()
+        self.obs = self.service.obs
+        if tracer is not None and self.service.tracer is None:
+            self.service.tracer = tracer
         self.vocab = LabelVocab()
         self._subs: dict[int, Subscription] = {}
         self._coalescer: TickCoalescer | None = None
@@ -502,11 +517,19 @@ class StreamSession:
         svc = self.service
         degraded = tuple(qid for qid, s in sorted(self._subs.items())
                          if s.n_overflow > 0)
-        ing = None if self._frontier is None else self._frontier.stats()
-        n_late = 0 if ing is None else ing.n_late_dropped
-        n_forced_gap = 0 if ing is None else ing.n_dropped_forced_gap
-        drop_rate = 0.0 if ing is None else (
-            n_late / max(1, n_late + ing.n_emitted))
+        # ONE source of truth for ingest health: the obs registry's
+        # ``ingest.*`` counters.  A live frontier refreshes them first;
+        # after a restore (no frontier bound yet) the restored counter
+        # history still reports, so health never silently resets to
+        # ACTIVE while the stream's drops persist.
+        ing = None
+        if self._frontier is not None:
+            self._frontier.publish_obs(self.obs)
+            ing = self._frontier.stats()
+        n_late = self.obs.counter("ingest.n_late_dropped").value
+        n_forced_gap = self.obs.counter("ingest.n_dropped_forced_gap").value
+        n_emitted = self.obs.counter("ingest.n_emitted").value
+        drop_rate = n_late / max(1, n_late + n_emitted)
         # forced-gap drops are capacity pressure (the reorder buffer
         # force-evicted past the watermark): any amount degrades health —
         # unlike user lateness, no threshold makes it acceptable
@@ -521,12 +544,22 @@ class StreamSession:
             degraded=degraded,
             ingest=ing,
             n_late_dropped=n_late,
-            n_duplicates=0 if ing is None else ing.n_duplicates,
-            n_reconnects=0 if ing is None else ing.n_reconnects,
+            n_duplicates=int(self.obs.counter("ingest.n_duplicates").value),
+            n_reconnects=int(self.obs.counter("ingest.n_reconnects").value),
             n_dropped_forced_gap=n_forced_gap,
             watermark=None if ing is None else ing.watermark,
             health=health,
         )
+
+    def metrics(self) -> dict:
+        """Flat snapshot of the session's obs registry (counters,
+        gauges incl. collect-time callbacks, histogram percentiles)."""
+        return self.obs.snapshot()
+
+    def prometheus(self) -> str:
+        """The session's metrics in Prometheus text exposition format
+        (serve it from any HTTP endpoint you like)."""
+        return to_prometheus(self.obs)
 
     @property
     def resume_offset(self) -> int:
@@ -572,16 +605,20 @@ class StreamSession:
 
     @classmethod
     def restore(cls, ckpt_dir: str, step: int | None = None,
-                tick_cache=None, backend: str | None = None) -> "StreamSession":
+                tick_cache=None, backend: str | None = None,
+                obs: MetricsRegistry | None = None) -> "StreamSession":
         """Rebuild a full session from the newest usable checkpoint:
         original qids, same label vocabulary, same pattern plans, zero
         recompiles for structures this process has already served.
         Match callbacks cannot persist — re-attach them on the restored
-        ``Subscription`` handles.
+        ``Subscription`` handles.  The obs registry's counter history
+        (drops, ticks, checkpoint latencies) reloads from the manifest,
+        so ``status()`` health attribution survives the restore.
         """
         svc = ContinuousSearchService.restore(
             ckpt_dir, step=step, tick_cache=tick_cache, backend=backend,
-            extract_matches=True)
+            extract_matches=True,
+            obs=obs if obs is not None else MetricsRegistry())
         extra = svc.manifest_extra if isinstance(svc.manifest_extra, dict) \
             else {}
         if extra.get("api") is None:

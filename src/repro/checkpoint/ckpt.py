@@ -29,6 +29,7 @@ import json
 import os
 import re
 import threading
+import time
 import warnings
 import zipfile
 from concurrent.futures import ThreadPoolExecutor
@@ -523,6 +524,10 @@ class AsyncCheckpointer:
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._lock = threading.Lock()
         self._pending = []
+        # cumulative seconds wait() spent blocked on unfinished writer
+        # futures — the serve loop's checkpoint-stall time (obs: the
+        # ``ckpt.stall_s`` gauge; BENCH_serve reports it per run)
+        self.stall_s = 0.0
 
     def save(self, step: int, tree, extra: dict | None = None,
              keep_last: int | None = None, n_shards: int = 1,
@@ -549,5 +554,9 @@ class AsyncCheckpointer:
     def wait(self):
         with self._lock:
             pending, self._pending = self._pending, []
+        blocked = [f for f in pending if not f.done()]
+        t0 = time.perf_counter() if blocked else 0.0
         for f in pending:
             f.result()
+        if blocked:
+            self.stall_s += time.perf_counter() - t0

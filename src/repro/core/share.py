@@ -489,6 +489,18 @@ class SharedPrefixForest:
             table_bytes=sum(n.table_bytes for n in nodes),
         )
 
+    def register_obs(self, obs) -> None:
+        """Expose forest shape under ``share.*`` as collect-time
+        callback gauges on a ``repro.obs.MetricsRegistry`` — evaluated
+        only at snapshot time, never on the serve loop."""
+        obs.register_gauge("share.n_nodes", lambda: self.stats().n_nodes)
+        obs.register_gauge("share.n_shared_nodes",
+                           lambda: self.stats().n_shared_nodes)
+        obs.register_gauge("share.n_tenants",
+                           lambda: self.stats().n_tenants)
+        obs.register_gauge("share.table_bytes",
+                           lambda: self.stats().table_bytes)
+
     # ------------------------------------------------------------------ #
     # checkpoint / restore
     # ------------------------------------------------------------------ #

@@ -1,0 +1,39 @@
+"""repro.obs — unified metrics + tracing for the serve loop.
+
+* :class:`MetricsRegistry` / :class:`Counter` / :class:`Gauge` /
+  :class:`Histogram`: the namespaced instrument registry every stat
+  surface (ingest, coalescer, tick, share, ckpt, mesh) reports into.
+* :class:`Tracer`: host-side JSONL span timers with per-tick
+  correlation ids — strictly outside traced/jitted code.
+* :func:`to_prometheus`: text exposition snapshot.
+* :func:`summarize_trace`: the ``python -m repro.obs summarize`` CLI.
+
+See README "Observability" for the metric-name reference table.
+"""
+
+from .export import to_prometheus
+from .metrics import (
+    DEFAULT_LATENCY_BUCKETS_MS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    percentile,
+)
+from .summarize import format_summary, summarize_trace
+from .trace import Span, Tracer, memory_tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "percentile",
+    "DEFAULT_LATENCY_BUCKETS_MS",
+    "Tracer",
+    "Span",
+    "memory_tracer",
+    "to_prometheus",
+    "summarize_trace",
+    "format_summary",
+]

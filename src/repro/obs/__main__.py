@@ -1,0 +1,7 @@
+"""``python -m repro.obs summarize trace.jsonl`` entry point."""
+
+import sys
+
+from .summarize import main
+
+sys.exit(main())

@@ -400,6 +400,24 @@ class ShardedSearchService(ContinuousSearchService):
                       "t_clock": int(s.t_clock)}
                 for gid, s in self.mesh_stats.items()}
 
+    def _register_obs_gauges(self) -> None:
+        super()._register_obs_gauges()
+        obs = self.obs
+        obs.gauge("mesh.n_replicas").set(self.n_replicas)
+        obs.register_gauge(
+            "mesh.replica_load_max", lambda: max(self.replica_load(),
+                                                 default=0))
+        obs.register_gauge(
+            "mesh.replica_pressure_max",
+            lambda: max(self.replica_pressure(), default=0))
+
+    def _trace_tick_extras(self, tr) -> None:
+        # the collectives run inside the jitted mesh tick; their psum/
+        # pmax scalars are already on host-reachable device buffers
+        # after the barrier, so reading them here adds no sync point
+        for gid, s in self.last_mesh_stats().items():
+            tr.event("mesh.collectives", gid=gid, **s)
+
     # -------------------------------------------------------------- #
     # checkpoint / restore
     # -------------------------------------------------------------- #
@@ -445,6 +463,8 @@ class ShardedSearchService(ContinuousSearchService):
         extract_matches: bool | None = None,
         n_replicas: int | None = None,
         placement=None,
+        obs=None,
+        tracer=None,
     ) -> "ShardedSearchService":
         """Rebuild a sharded service from its newest usable checkpoint.
 
@@ -464,6 +484,10 @@ class ShardedSearchService(ContinuousSearchService):
             overrides["extract_matches"] = extract_matches
         if placement is not None:
             overrides["placement"] = placement
+        if obs is not None:
+            overrides["obs"] = obs
+        if tracer is not None:
+            overrides["tracer"] = tracer
         candidates = ([step] if step is not None
                       else list(reversed(checkpoint_steps(ckpt_dir))))
         last_err: CheckpointError | None = None
@@ -598,4 +622,6 @@ class ShardedSearchService(ContinuousSearchService):
         svc._ckpt_step = int(step)
         svc.registry._next_qid = max(
             svc.registry._next_qid, int(counters["next_qid"]))
+        if svc.obs is not None and man.get("obs"):
+            svc.obs.load_manifest(man["obs"])
         return svc

@@ -132,6 +132,7 @@ from repro.core.share import (
 )
 from repro.core.engine import NO_WATERMARK
 from repro.core.state import EdgeBatch, EngineState, init_state, make_batch
+from repro.obs import MetricsRegistry, Tracer
 from repro.runtime.straggler import TickCoalescer, quantize_pow2
 from repro.stream.generator import to_batches
 
@@ -205,6 +206,8 @@ class ContinuousSearchService:
         tick_cache: SlotTickCache | None = None,
         enable_sharing: bool = False,
         compact_every: int = 1,
+        obs: MetricsRegistry | None = None,
+        tracer: Tracer | None = None,
     ):
         if backend not in (J.JoinBackend.REF, J.JoinBackend.PALLAS,
                            J.JoinBackend.PALLAS_INTERPRET):
@@ -254,6 +257,29 @@ class ContinuousSearchService:
         # layer persists its vocab/pattern plans here); a dict, or a
         # zero-arg callable evaluated at checkpoint time
         self.manifest_extra: dict = {}
+        # observability (repro.obs): both OFF by default, and every hot-
+        # path call site is guarded with an identity check so the
+        # disabled service allocates nothing per tick and emits no spans.
+        # Runtime knobs, deliberately NOT in the checkpoint config — a
+        # restored service chooses its own instrumentation; the
+        # registry's counter/histogram history rides in the manifest.
+        self.obs = obs
+        self.tracer = tracer
+        if obs is not None:
+            self._register_obs_gauges()
+
+    def _register_obs_gauges(self) -> None:
+        """Collect-time callback gauges (snapshot cost, zero tick cost)."""
+        obs = self.obs
+        obs.register_gauge("tick.n_active", lambda: self.n_active)
+        obs.register_gauge(
+            "tick.n_groups",
+            lambda: sum(len(gs) for gs in self._groups.values()))
+        obs.register_gauge("tick.n_compiles", lambda: self.n_compiles)
+        if self.ckpt is not None:
+            obs.register_gauge("ckpt.stall_s", lambda: self.ckpt.stall_s)
+        if self.forest is not None:
+            self.forest.register_obs(obs)
 
     # ------------------------------------------------------------------ #
     @property
@@ -553,6 +579,8 @@ class ContinuousSearchService:
             # overflow joins latency and queue depth as a throttle input:
             # dropped appends mean the tick was too big for the tables
             coalescer.record(lat_ms, queue_depth, tick_overflow)
+            if self.obs is not None:
+                self._observe_coalescer(coalescer)
             i += len(chunk)
             if self.ckpt and ckpt_every and self.n_ticks % ckpt_every == 0:
                 self.checkpoint()
@@ -577,19 +605,42 @@ class ContinuousSearchService:
         ``serve_stream`` (arrival-order chunks, ``watermark=None``) and
         ``serve_frontier`` (watermark-order chunks with the frontier's
         traced event-time watermark)."""
+        tr = self.tracer
+        if tr is not None:
+            tr.next_tick()
         active = [g for g in self._iter_groups() if not g.idle]
         batch = make_batch(
             **to_batches(chunk, quantize_pow2(len(chunk)))[0])
         t0 = time.perf_counter()
         views, forest_nds = self._advance_forest(batch, watermark)
-        results = [(g, self._advance_group(g, batch, views, forest_nds,
-                                           watermark))
-                   for g in active]
+        if tr is None:
+            results = [(g, self._advance_group(g, batch, views,
+                                               forest_nds, watermark))
+                       for g in active]
+        else:
+            # per-stage wall clocks via bare perf_counter reads + post-
+            # hoc record(): the tracer-off branch above allocates no
+            # span objects and reads no extra clocks
+            tr.record("tick.forest",
+                      (time.perf_counter() - t0) * 1e3, n_nodes=len(views))
+            results = []
+            for g in active:
+                ts = time.perf_counter()
+                results.append((g, self._advance_group(
+                    g, batch, views, forest_nds, watermark)))
+                tr.record("tick.slot_dispatch",
+                          (time.perf_counter() - ts) * 1e3, gid=g.gid)
+            tb = time.perf_counter()
         jax.block_until_ready(                              # the barrier
             [g.sstate for g in active]
             + ([] if self.forest is None else self.forest.states()))
-        lat_ms = (time.perf_counter() - t0) * 1e3
+        t_end = time.perf_counter()
+        lat_ms = (t_end - t0) * 1e3
+        if tr is not None:
+            tr.record("tick.barrier", (t_end - tb) * 1e3)
+            self._trace_tick_extras(tr)
         tick_overflow = 0
+        n_matches = 0
         for g, res in results:
             for k, qid in enumerate(g.qids):
                 if qid is None:
@@ -597,15 +648,43 @@ class ContinuousSearchService:
                 r = jax.tree.map(lambda x, k=k: x[k], res)
                 n_new = int(r.n_new_matches)
                 tick_overflow += int(r.n_overflow)
+                n_matches += n_new
                 totals[qid] = totals.get(qid, 0) + n_new
                 if n_new and on_match is not None:
                     valid = np.asarray(r.match_valid)
                     on_match(qid,
                              np.asarray(r.match_bindings)[valid],
                              np.asarray(r.match_ets)[valid])
+        if tr is not None:
+            tr.record("tick.deliver",
+                      (time.perf_counter() - t_end) * 1e3,
+                      n_matches=n_matches)
         self.n_ticks += 1
         self.n_edges_ingested += len(chunk)
+        obs = self.obs
+        if obs is not None:
+            obs.histogram("tick.latency_ms").observe(lat_ms)
+            obs.counter("tick.n_ticks").inc()
+            obs.counter("tick.n_edges").inc(len(chunk))
+            obs.counter("tick.n_matches").inc(n_matches)
+            obs.counter("tick.n_overflow").inc(tick_overflow)
+            if views:
+                obs.counter("share.n_prefix_ticks").inc(len(views))
         return lat_ms, tick_overflow, len(views)
+
+    def _trace_tick_extras(self, tr: Tracer) -> None:
+        """Tracer-on hook after the tick barrier — the mesh service
+        emits its collective scalars here; base service has none."""
+
+    def _observe_coalescer(self, coalescer: TickCoalescer) -> None:
+        """Mirror the AIMD decision just taken into ``coalescer.*``
+        (obs-on path only — callers guard on ``self.obs``)."""
+        self.obs.counter(f"coalescer.{coalescer.last_action}").inc()
+        self.obs.gauge("coalescer.batch").set(coalescer.batch)
+        if self.tracer is not None:
+            self.tracer.event("coalescer.decision",
+                              action=coalescer.last_action,
+                              batch=coalescer.batch)
 
     def _final_checkpoint(self, ckpt_every: int, final: bool) -> None:
         if self.ckpt:
@@ -687,11 +766,17 @@ class ContinuousSearchService:
         prev = frontier.stats()
         idle = 0
         while not frontier.exhausted:
+            tr = self.tracer
+            t_pump = time.perf_counter() if tr is not None else 0.0
             frontier.pump(pump_size)
+            t_rel = time.perf_counter() if tr is not None else 0.0
             chunk = frontier.take_ready(limit=coalescer.batch)
+            t_done = time.perf_counter() if tr is not None else 0.0
             if not chunk:
                 idle += 1
                 coalescer.record_idle()
+                if self.obs is not None:
+                    self._observe_coalescer(coalescer)
                 if max_idle_rounds is not None and idle > max_idle_rounds:
                     break
                 continue
@@ -705,7 +790,16 @@ class ContinuousSearchService:
                 NO_WATERMARK if wm is None else wm, jnp.int32)
             lat_ms, tick_overflow, n_shared = self._tick_chunk(
                 chunk, on_match, totals, wm_in)
+            if tr is not None:
+                # recorded after _tick_chunk so the spans carry this
+                # tick's correlation id (next_tick advances in there)
+                tr.record("ingest.pump", (t_rel - t_pump) * 1e3)
+                tr.record("ingest.release", (t_done - t_rel) * 1e3,
+                          n_released=len(chunk))
             coalescer.record(lat_ms, frontier.buffered, tick_overflow)
+            if self.obs is not None:
+                self._observe_coalescer(coalescer)
+                frontier.publish_obs(self.obs)
             if self.ckpt and ckpt_every and \
                     self.n_ticks % ckpt_every == 0:
                 self.checkpoint()
@@ -797,6 +891,10 @@ class ContinuousSearchService:
                 "n_ticks": int(self.n_ticks),
                 "next_qid": int(self.registry.next_qid),
             },
+            # obs registry history (counters + histogram buckets): a
+            # restored service resumes its cumulative metrics, so e.g.
+            # drop-driven health attribution survives restore
+            "obs": (None if self.obs is None else self.obs.to_manifest()),
         }
 
     def _ckpt_tree(self) -> dict:
@@ -830,6 +928,8 @@ class ContinuousSearchService:
         """
         if self.ckpt is None:
             raise ValueError("service was constructed without ckpt_dir")
+        t0 = time.perf_counter() if (self.obs is not None
+                                     or self.tracer is not None) else 0.0
         if step is None:
             step = max(self.n_ticks, self._ckpt_step + 1)
         self._ckpt_step = max(self._ckpt_step, step)
@@ -845,9 +945,20 @@ class ContinuousSearchService:
             self._chain_len = 0
         self._last_manifest = man
         self._last_man_step = step
-        return self.ckpt.save(step, self._ckpt_tree(), extra=extra,
-                              keep_last=self.keep_checkpoints,
-                              **self._ckpt_save_kwargs())
+        fut = self.ckpt.save(step, self._ckpt_tree(), extra=extra,
+                             keep_last=self.keep_checkpoints,
+                             **self._ckpt_save_kwargs())
+        if self.obs is not None or self.tracer is not None:
+            # the synchronous publish cost: manifest build + device_get
+            # snapshot (the async file write is tracked by ckpt.stall_s)
+            ms = (time.perf_counter() - t0) * 1e3
+            if self.obs is not None:
+                self.obs.histogram("ckpt.publish_ms").observe(ms)
+                self.obs.counter("ckpt.n_checkpoints").inc()
+            if self.tracer is not None:
+                self.tracer.record("ckpt.publish", ms, step=int(step))
+                self.tracer.flush()
+        return fut
 
     @classmethod
     def restore(
@@ -857,6 +968,8 @@ class ContinuousSearchService:
         tick_cache: SlotTickCache | None = None,
         backend: str | None = None,
         extract_matches: bool | None = None,
+        obs: MetricsRegistry | None = None,
+        tracer: Tracer | None = None,
     ) -> "ContinuousSearchService":
         """Rebuild a full multi-tenant service from a checkpoint.
 
@@ -880,6 +993,14 @@ class ContinuousSearchService:
             overrides["backend"] = backend
         if extract_matches is not None:
             overrides["extract_matches"] = extract_matches
+        # instrumentation is a runtime knob (never in the checkpointed
+        # config): the restored service adopts the caller's registry/
+        # tracer, then reloads counter/histogram history from the
+        # manifest inside _restore_step
+        if obs is not None:
+            overrides["obs"] = obs
+        if tracer is not None:
+            overrides["tracer"] = tracer
         last_err: CheckpointError | None = None
         for s in candidates:
             try:
@@ -963,6 +1084,8 @@ class ContinuousSearchService:
         svc._ckpt_step = int(step)
         svc.registry._next_qid = max(
             svc.registry._next_qid, int(counters["next_qid"]))
+        if svc.obs is not None and man.get("obs"):
+            svc.obs.load_manifest(man["obs"])
         return svc
 
     # ------------------------------------------------------------------ #

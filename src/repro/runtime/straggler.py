@@ -44,6 +44,11 @@ class TickCoalescer:
     target_latency_ms: float = 50.0
     batch: int = 256
     _ema_latency: float = 0.0
+    # last decision taken by record()/record_idle(), for observability
+    # ("overflow_md" | "queue_mi" | "latency_ad" | "hold" | "idle");
+    # the serve loop mirrors it into the obs registry — the coalescer
+    # itself stays dependency-free
+    last_action: str = "hold"
 
     def __post_init__(self):
         if not (0 < self.min_batch <= self.max_batch):
@@ -84,11 +89,16 @@ class TickCoalescer:
         self._ema_latency = (1 - a) * self._ema_latency + a * tick_latency_ms
         if n_overflow > 0:
             self.batch = max(self.min_batch, self.batch // 2)  # capacity MD
+            self.last_action = "overflow_md"
         elif queue_depth > 2 * self.batch and \
                 self._ema_latency < self.target_latency_ms:
             self.batch = min(self.max_batch, self.batch * 2)   # MI
+            self.last_action = "queue_mi"
         elif self._ema_latency > self.target_latency_ms:
             self.batch = max(self.min_batch, int(self.batch * 0.8))  # AD
+            self.last_action = "latency_ad"
+        else:
+            self.last_action = "hold"
         return self.batch
 
     def record_idle(self) -> int:
@@ -102,4 +112,5 @@ class TickCoalescer:
         the first real tick afterwards.
         """
         self._ema_latency *= 0.7
+        self.last_action = "idle"
         return self.batch

@@ -656,6 +656,37 @@ class IngestFrontier:
             } for a in self.adapters},
         )
 
+    def publish_obs(self, obs) -> None:
+        """Mirror the frontier's counters/gauges into a
+        ``repro.obs.MetricsRegistry`` under ``ingest.*``.
+
+        Called once per serve tick by ``serve_frontier`` when the
+        service carries a registry.  Reads plain int attributes only
+        (no ``IngestStats`` construction); counters use ``set_total``
+        so a frontier resumed from a checkpoint (which restores its own
+        counters from the same manifest the registry restores from)
+        never double-counts.
+        """
+        obs.counter("ingest.n_emitted").set_total(self.n_emitted)
+        obs.counter("ingest.n_late_dropped").set_total(self.n_late_dropped)
+        obs.counter("ingest.n_dropped_forced_gap").set_total(
+            self.n_dropped_forced_gap)
+        obs.counter("ingest.n_forced").set_total(self.n_forced)
+        obs.counter("ingest.n_duplicates").set_total(
+            sum(a.n_duplicates for a in self.adapters))
+        obs.counter("ingest.n_reconnects").set_total(
+            sum(a.n_reconnects for a in self.adapters))
+        wm = self._wm_floor
+        if wm is not None:
+            obs.gauge("ingest.watermark").set(wm)
+            highs = [a.high for a in self.adapters if a.high is not None]
+            obs.gauge("ingest.watermark_lag").set(
+                max(highs) - wm if highs else 0)
+            if self.emit_floor is not None:
+                obs.gauge("ingest.window_staleness").set(
+                    max(0, self.emit_floor - wm))
+        obs.gauge("ingest.buffered").set(len(self._heap))
+
     # ------------------------------------------------------------------ #
     # checkpoint / resume
     # ------------------------------------------------------------------ #

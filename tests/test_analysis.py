@@ -45,15 +45,27 @@ def test_lint_fixture_golden_findings():
         ("TRC104", "bad_branch"),
         ("TRC105", "tick"),
         ("TRC106", "serve"),
+        ("TRC107", "bad_obs_emit"),
     }
     sev = {f.rule: f.severity for f in findings}
-    assert sev["TRC101"] == sev["TRC104"] == ERROR
+    assert sev["TRC101"] == sev["TRC104"] == sev["TRC107"] == ERROR
     assert sev["TRC105"] == sev["TRC106"] == WARNING
     # the inline-suppressed cast and every ok_* pattern stay silent
     assert not any("suppressed" in f.symbol or "ok_" in f.symbol
                    or "host_helper" in f.symbol or "clean" in f.symbol
                    or "donating" in f.symbol for f in findings)
     assert stats["n_traced_functions"] >= 6
+    # the census sees both the traced (bad) and host (ok) emission sites
+    assert stats["n_obs_sites"] >= 3
+
+
+def test_lint_obs_sites_census_and_clean_tree():
+    """The real tree: every repro.obs emission site is host-side (zero
+    TRC107 findings), and the census proves the linter actually sees
+    the instrumented serve loop (service/session/ingest/benches)."""
+    findings, stats = lint_tree(SRC_REPRO)
+    assert not [f for f in findings if f.rule == "TRC107"]
+    assert stats["n_obs_sites"] >= 10
 
 
 def test_lint_recognizes_aliased_shard_map_roots(tmp_path):
